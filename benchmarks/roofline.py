@@ -1,0 +1,197 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Reads ``results/dryrun.json`` (produced by ``repro.launch.dryrun``) and for
+every (arch x shape x mesh) cell derives the three per-device roofline
+terms on TPU v5e constants:
+
+    compute_s    = device_FLOPs / 197e12            (bf16 peak per chip)
+    memory_s     = device_HBM_bytes / 819e9
+    collective_s = effective_wire_bytes / 50e9      (per ICI link)
+
+``device_FLOPs`` / ``HBM bytes`` / collective bytes come from the
+loop-aware HLO analyzer (``repro.launch.hlo_analysis``), NOT from
+``cost_analysis`` (which counts scan bodies once — see DESIGN.md).
+
+Wire-byte factors per collective kind (ring algorithms, group size g):
+    all-reduce       2 (g-1)/g * buffer      ~ 2x
+    all-gather       (g-1)/g * result        ~ 1x result (gathered) bytes
+    reduce-scatter   (g-1)   * result        (result is the scattered piece)
+    all-to-all       (g-1)/g * result
+    collective-permute  1x result
+
+MODEL_FLOPS (the "useful work" yardstick):
+    train:   tokens * 6 * N_mm(active)  + 12 * B * L^2 * H * hd * layers
+    prefill: tokens * 2 * N_mm(active)  +  4 * B * L^2 * H * hd * layers
+    decode:  B * 2 * N_mm(active)       +  4 * B * S * H * hd * layers
+(N_mm = matmul-participating params; embedding gather excluded, LM head
+included; MoE counts only routed-active + shared experts.)
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+
+
+def wire_bytes(collectives: dict) -> float:
+    total = 0.0
+    for kind, v in collectives.items():
+        if not isinstance(v, dict) or "bytes" not in v:
+            continue
+        g = max(v.get("group") or [2])
+        b = v["bytes"]
+        if kind == "all-reduce":
+            total += 2.0 * (g - 1) / g * b
+        elif kind == "all-gather":
+            total += (g - 1) / g * b
+        elif kind == "reduce-scatter":
+            total += (g - 1) * b
+        elif kind == "all-to-all":
+            total += (g - 1) / g * b
+        else:  # collective-permute
+            total += b
+    return total
+
+
+def _n_mm(cfg) -> tuple:
+    """(matmul params total, matmul params active) — see module docstring."""
+    v, d = cfg.padded_vocab, cfg.d_model
+    total = cfg.num_params()
+    embed = v * d
+    head = v * d
+    trunk = total - embed - (head if not cfg.tie_embeddings else 0)
+    n_mm = trunk + head
+    active = n_mm
+    if cfg.moe:
+        moe_layers = cfg.num_layers - cfg.first_k_dense
+        routed_total = moe_layers * cfg.n_routed_experts * 3 * d * cfg.moe_d_ff
+        routed_active = moe_layers * cfg.moe_top_k * 3 * d * cfg.moe_d_ff
+        active = n_mm - routed_total + routed_active
+    return n_mm, active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs import registry
+    cfg = registry.get_arch(arch)
+    shape = registry.SHAPES[shape_name]
+    b, l = shape.global_batch, shape.seq_len
+    _, n_act = _n_mm(cfg)
+    h_hd = (cfg.n_heads * cfg.head_dim_
+            if cfg.block_type in ("attn", "hybrid") and cfg.attn_type == "gqa"
+            else (cfg.n_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+                  if cfg.attn_type == "mla" and cfg.block_type == "attn"
+                  else 0))
+    if cfg.block_type == "hybrid":
+        h_hd = cfg.n_heads * cfg.head_dim_
+    nl = cfg.num_layers
+    if shape.kind == "train":
+        attn = 12.0 * b * l * l * h_hd * nl
+        if cfg.sliding_window:  # windowed layers touch only L*W pairs
+            n_glob = len(cfg.global_attn_layers)
+            attn = 12.0 * b * l * h_hd * (
+                n_glob * l + (nl - n_glob) * min(cfg.sliding_window, l))
+        return b * l * 6.0 * n_act + attn
+    if shape.kind == "prefill":
+        attn = 4.0 * b * l * l * h_hd * nl
+        if cfg.sliding_window:
+            n_glob = len(cfg.global_attn_layers)
+            attn = 4.0 * b * l * h_hd * (
+                n_glob * l + (nl - n_glob) * min(cfg.sliding_window, l))
+        return b * l * 2.0 * n_act + attn
+    # decode
+    attn = 4.0 * b * l * h_hd * nl
+    if cfg.sliding_window:
+        n_glob = len(cfg.global_attn_layers)
+        attn = 4.0 * b * h_hd * (n_glob * l
+                                 + (nl - n_glob) * min(cfg.sliding_window, l))
+    if cfg.attn_type == "mla" and cfg.block_type == "attn":
+        # absorbed decode reads the compressed cache: per token ~ H*(r+dr)*S
+        attn = 4.0 * b * l * cfg.n_heads * (cfg.kv_lora_rank
+                                            + cfg.qk_rope_head_dim) * nl
+    if cfg.block_type == "ssm":
+        attn = 6.0 * b * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * nl
+    return b * 2.0 * n_act + attn
+
+
+def analyze(results: dict) -> list:
+    rows = []
+    for key, v in sorted(results.items()):
+        if not v.get("ok"):
+            rows.append({"key": key, "ok": False})
+            continue
+        dev = v["devices"]
+        c_s = v["flops"] / PEAK_FLOPS
+        m_s = v["hbm_bytes"] / HBM_BW
+        w = wire_bytes(v["collectives"])
+        k_s = w / LINK_BW
+        dom = max(("compute", c_s), ("memory", m_s),
+                  ("collective", k_s), key=lambda t: t[1])[0]
+        mf = model_flops(v["arch"], v["shape"]) / dev
+        step_s = max(c_s, m_s, k_s)  # perfectly-overlapped bound
+        rows.append({
+            "key": key, "ok": True, "arch": v["arch"], "shape": v["shape"],
+            "mesh": v["mesh"], "devices": dev,
+            "compute_s": c_s, "memory_s": m_s, "collective_s": k_s,
+            "wire_bytes": w, "dominant": dom,
+            "model_flops_dev": mf, "hlo_flops_dev": v["flops"],
+            "useful_ratio": mf / max(v["flops"], 1.0),
+            "step_bound_s": step_s,
+            "roofline_fraction": (mf / PEAK_FLOPS) / max(step_s, 1e-30),
+            "hint": _hint(dom, v),
+        })
+    return rows
+
+
+def _hint(dom: str, v: dict) -> str:
+    if dom == "compute":
+        return ("compute-bound: raise useful-FLOP ratio (less remat/capacity "
+                "waste) or accept — this is the healthy regime")
+    if dom == "memory":
+        return ("HBM-bound: shrink resident bytes (bf16 carries, fused "
+                "softmax-xent, windowed caches) or raise arithmetic "
+                "intensity per pass")
+    return ("collective-bound: reshard to cut wire bytes (FSDP gather "
+            "granularity, a2a capacity factor, head padding), overlap "
+            "collectives with compute")
+
+
+def table(rows, mesh_filter=None) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| useful FLOP ratio | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if not r.get("ok") or (mesh_filter and r["mesh"] != mesh_filter):
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} |\n")
+    return "".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+    with open(args.dryrun) as fh:
+        results = json.load(fh)
+    rows = analyze(results)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as fh:
+        json.dump(rows, fh, indent=1)
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        print(f"\n## mesh {mesh}\n")
+        print(table(rows, mesh))
+    bad = [r for r in rows if not r.get("ok")]
+    print(f"{len(rows) - len(bad)} cells analyzed, {len(bad)} failed")
+
+
+if __name__ == "__main__":
+    main()

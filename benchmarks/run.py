@@ -1,0 +1,46 @@
+"""Benchmark driver — one section per paper table.
+
+Prints ``name,us_per_call,derived`` CSV.  Table mapping:
+
+* Table I   -> benchmarks.datasets   (11 MOT15-shaped sequences, FPS+MOTA)
+* Table IV  -> benchmarks.kernel_ai  (per-phase time share + AI)
+* Table V   -> benchmarks.speedup    (per-op Python vs fused batched JAX)
+* Table VI  -> benchmarks.scaling    (strong vs weak vs throughput)
+
+Roofline (§Roofline, from the dry-run) lives in ``benchmarks.roofline`` —
+run it separately after ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (association_ablation, datasets, kernel_ai,
+                            scaling, speedup)
+
+    sections = [
+        ("tableI", datasets.run),
+        ("tableIV", kernel_ai.run),
+        ("tableV", speedup.run),
+        ("tableVI", scaling.run),
+        ("ablation", association_ablation.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in sections:
+        try:
+            for row_name, value, derived in fn():
+                print(f"{row_name},{value:.4f},{derived}")
+                sys.stdout.flush()
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name}/ERROR,-1,see stderr")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

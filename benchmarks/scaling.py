@@ -1,0 +1,148 @@
+"""Paper Table VI / Fig. 4 analogue: strong vs weak vs throughput scaling.
+
+On TPU the paper's three modes map to (DESIGN.md §2):
+
+* strong     — split one frame's tiny matrices across the ``model`` axis;
+* weak       — one stream per worker (lane batch = #workers);
+* throughput — many streams per worker (lane batch = k x #workers).
+
+Two measurements:
+
+1. **FPS vs lane count** on the host device: the vectorization win is the
+   paper's throughput claim (each added lane is a paper "core").
+2. **Structural collective cost** (subprocess, 8 fake devices): the SORT
+   step lowered with stream-axis sharding (throughput/weak) vs tracker-axis
+   sharding (strong); wire bytes per frame from the loop-aware HLO
+   analysis.  Strong scaling pays collectives per tiny op; throughput pays
+   none — the paper's conclusion, derived from the compiled artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SortConfig, SortEngine
+from repro.data.synthetic import SceneConfig, generate_scene
+
+
+def fps_vs_lanes(num_frames=60, lane_counts=(1, 4, 16, 64, 256), seed=0):
+    scene = generate_scene(SceneConfig(num_frames=num_frames, max_objects=10,
+                                       seed=seed))
+    _, _, db, dm = scene
+    d = db.shape[1]
+    rows = []
+    for s in lane_counts:
+        eng = SortEngine(SortConfig(max_trackers=16, max_detections=d))
+        det = jnp.asarray(np.repeat(db[:, None], s, 1))
+        msk = jnp.asarray(np.repeat(dm[:, None], s, 1))
+        run_fn = jax.jit(eng.run)
+        jax.block_until_ready(run_fn(eng.init(s), det, msk))
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_fn(eng.init(s), det, msk))
+        dt = time.perf_counter() - t0
+        rows.append((f"tableVI/throughput_fps_lanes={s}",
+                     s * num_frames / dt, f"us_per_frame_per_lane="
+                     f"{dt / (s * num_frames) * 1e6:.1f}"))
+    return rows
+
+
+_STRUCTURAL = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import SortConfig, SortEngine
+    from repro.launch.mesh import make_mesh
+    from repro.launch.hlo_analysis import analyze_text
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    S, T, D = 64, 16, 16
+    eng = SortEngine(SortConfig(max_trackers=T, max_detections=D))
+    state = eng.init(S)
+    det = jnp.zeros((S, D, 4)); msk = jnp.zeros((S, D), bool)
+
+    def lower(state_spec, det_spec):
+        st_sh = jax.tree.map(
+            lambda x: NamedSharding(mesh, state_spec(x)), state)
+        _, out = jax.eval_shape(eng.step, state, det, msk)
+        out_sh = jax.tree.map(
+            lambda x: NamedSharding(mesh, state_spec(x)), out)
+        c = jax.jit(eng.step,
+                    in_shardings=(st_sh,
+                                  NamedSharding(mesh, det_spec),
+                                  NamedSharding(mesh, P(*det_spec[:-1]))),
+                    out_shardings=(st_sh, out_sh)
+                    ).lower(state, det, msk).compile()
+        return analyze_text(c.as_text())
+
+    # throughput/weak: stream axis over data — paper's winning mode
+    thr = lower(lambda x: P("data", *([None] * (x.ndim - 1))),
+                P("data", None, None))
+    # strong: tracker axis over model — paper's losing mode
+    strong = lower(
+        lambda x: P(None, "model", *([None] * max(x.ndim - 2, 0)))
+        if x.ndim >= 2 else P(*([None] * x.ndim)),
+        P(None, "model", None))
+
+    # paper-faithful strong scaling: ONE stream's frame split over 8 chips
+    # (vs. zero collectives for the same stream on one chip).
+    mesh1 = make_mesh((1, 8), ("data", "model"))
+    eng1 = SortEngine(SortConfig(max_trackers=T, max_detections=D))
+    st1 = eng1.init(1)
+    det1 = jnp.zeros((1, D, 4)); msk1 = jnp.zeros((1, D), bool)
+    def spec1(x):
+        return P(None, "model", *([None] * max(x.ndim - 2, 0))) \
+            if x.ndim >= 2 else P(*([None] * x.ndim))
+    st_sh1 = jax.tree.map(lambda x: NamedSharding(mesh1, spec1(x)), st1)
+    _, out1 = jax.eval_shape(eng1.step, st1, det1, msk1)
+    out_sh1 = jax.tree.map(lambda x: NamedSharding(mesh1, spec1(x)), out1)
+    c1 = jax.jit(eng1.step,
+                 in_shardings=(st_sh1, NamedSharding(mesh1, P(None, "model", None)),
+                               NamedSharding(mesh1, P(None, "model"))),
+                 out_shardings=(st_sh1, out_sh1)).lower(st1, det1, msk1).compile()
+    strong1 = analyze_text(c1.as_text())
+
+    print(json.dumps({
+        "throughput_coll_bytes": thr["collective_bytes"],
+        "strong_coll_bytes": strong["collective_bytes"],
+        "strong1_coll_bytes_per_stream_frame": strong1["collective_bytes"],
+        "throughput_coll_bytes_per_stream_frame": thr["collective_bytes"] / S,
+        "throughput_flops": thr["flops"], "strong_flops": strong["flops"],
+    }))
+""")
+
+
+def structural():
+    r = subprocess.run(
+        [sys.executable, "-c", _STRUCTURAL], capture_output=True, text=True,
+        timeout=900,
+        env={**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+             "XLA_FLAGS": ""})
+    if r.returncode != 0:
+        return [("tableVI/structural_error", -1.0, r.stderr[-200:])]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    ratio = (out["strong1_coll_bytes_per_stream_frame"]
+             / max(out["throughput_coll_bytes_per_stream_frame"], 1))
+    return [
+        ("tableVI/throughput_sharding_coll_bytes_per_step",
+         out["throughput_coll_bytes"], "streams-over-data, 64 streams"),
+        ("tableVI/strong_sharding_coll_bytes_per_step",
+         out["strong_coll_bytes"], "trackers-over-model, 64 streams"),
+        ("tableVI/strong1_coll_bytes_per_stream_frame",
+         out["strong1_coll_bytes_per_stream_frame"],
+         f"ONE stream split over 8 chips: {ratio:.0f}x the wire bytes per "
+         f"stream-frame of throughput mode"),
+    ]
+
+
+def run():
+    return fps_vs_lanes() + structural()

@@ -1,0 +1,43 @@
+"""Quickstart: track objects across a batch of synthetic video streams.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SortConfig, SortEngine, metrics
+from repro.data.synthetic import SceneConfig, generate_scene
+
+
+def main():
+    # 1. Make a synthetic 100-frame scene with ~8 objects (MOT15-shaped).
+    scene_cfg = SceneConfig(num_frames=100, max_objects=8, seed=0)
+    gt_boxes, gt_mask, det_boxes, det_mask = generate_scene(scene_cfg)
+    print(f"frames={det_boxes.shape[0]}  det slots={det_boxes.shape[1]}")
+
+    # 2. Build the batched SORT engine (paper defaults) for 4 parallel
+    #    streams — we replicate the scene to show the throughput axis.
+    engine = SortEngine(SortConfig(max_trackers=16,
+                                   max_detections=det_boxes.shape[1]))
+    streams = 4
+    state = engine.init(streams)
+    frames = jnp.asarray(np.repeat(det_boxes[:, None], streams, 1))
+    masks = jnp.asarray(np.repeat(det_mask[:, None], streams, 1))
+
+    # 3. One jitted call scans all frames for all streams.
+    state, out = jax.jit(engine.run)(state, frames, masks)
+
+    # 4. Inspect stream 0: emitted tracks per frame + tracking quality.
+    for t in (0, 10, 50, 99):
+        em = np.asarray(out.emit[t, 0])
+        ids = np.asarray(out.uid[t, 0])[em]
+        print(f"frame {t:3d}: {em.sum()} tracks, ids={sorted(ids.tolist())}")
+    m = metrics.mota(gt_boxes, gt_mask, np.asarray(out.boxes[:, 0]),
+                     np.asarray(out.uid[:, 0]), np.asarray(out.emit[:, 0]))
+    print(f"MOTA={m['mota']:.3f}  id_switches={m['id_switches']} "
+          f"(tp={m['tp']} fp={m['fp']} fn={m['fn']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end tracking service — the paper's workload as a deployable driver.
+
+Ingests MOT15-format detection files (or synthesizes Table-I-shaped ones),
+length-buckets them (straggler mitigation), packs each bucket into a dense
+stream batch, runs the jitted SORT engine, and writes MOT15 submission
+files — the full Algorithm 1 pipeline, throughput-parallel over streams.
+
+    PYTHONPATH=src python examples/tracking_service.py --replicate 4 \
+        --out /tmp/sort_out
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SortConfig, SortEngine
+from repro.data import mot, stream
+from repro.data.synthetic import SceneConfig, generate_scene
+
+
+def load_or_synthesize(det_dir):
+    seqs = []
+    if det_dir and os.path.isdir(det_dir):
+        for name in sorted(os.listdir(det_dir)):
+            if name.endswith(".txt"):
+                db, dm = mot.read_det_file(os.path.join(det_dir, name))
+                seqs.append((name[:-4], db, dm))
+    if not seqs:  # synthesize the 11 paper sequences
+        for i, (name, (frames, max_obj)) in enumerate(mot.TABLE_I.items()):
+            _, _, db, dm = generate_scene(
+                SceneConfig(num_frames=frames, max_objects=max_obj, seed=i))
+            seqs.append((name, db, dm))
+    return seqs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--det-dir", default=None,
+                    help="directory of MOT15 det.txt files")
+    ap.add_argument("--out", default="/tmp/sort_out")
+    ap.add_argument("--replicate", type=int, default=1,
+                    help="paper §VI: replicate inputs k times")
+    ap.add_argument("--buckets", type=int, default=3)
+    args = ap.parse_args()
+
+    seqs = load_or_synthesize(args.det_dir)
+    if args.replicate > 1:
+        seqs = stream.replicate(seqs, args.replicate)
+    os.makedirs(args.out, exist_ok=True)
+
+    total_frames = 0
+    t_start = time.perf_counter()
+    for bucket in stream.length_buckets(seqs, num_buckets=args.buckets):
+        batch = stream.pack(bucket, pad_multiple=1)
+        f, s, d, _ = batch.det_boxes.shape
+        eng = SortEngine(SortConfig(max_trackers=16, max_detections=d))
+        state = eng.init(s)
+        _, out = jax.jit(eng.run)(state, jnp.asarray(batch.det_boxes),
+                                  jnp.asarray(batch.det_mask))
+        jax.block_until_ready(out.boxes)
+        for i, name in enumerate(batch.names):
+            fi = int(batch.frame_valid[:, i].sum())
+            mot.write_results(os.path.join(args.out, f"{name}.txt"),
+                              np.asarray(out.boxes[:fi, i]),
+                              np.asarray(out.uid[:fi, i]),
+                              np.asarray(out.emit[:fi, i]))
+            total_frames += fi
+        print(f"bucket: {s} streams x {f} frames done")
+    dt = time.perf_counter() - t_start
+    print(f"{len(seqs)} sequences, {total_frames} frames in {dt:.2f}s "
+          f"-> {total_frames / dt:,.0f} FPS (incl. compile)  "
+          f"results in {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Train a ~100M-param LM for a few hundred steps end-to-end (CPU-friendly).
+
+Uses the full production driver (``repro.launch.train``): synthetic token
+pipeline, AdamW, async checkpointing, crash-safe resume.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~100M params
+    PYTHONPATH=src python examples/train_lm.py --tiny     # smoke scale
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.tiny:
+        argv = ["--arch", "qwen1.5-0.5b", "--smoke",
+                "--steps", str(args.steps or 60), "--batch", "8",
+                "--seq", "64", "--lr", "3e-3",
+                "--ckpt-dir", "/tmp/repro_train_tiny", "--resume"]
+    else:
+        # qwen1.5-0.5b full config at short sequence: ~100M-scale active
+        # compute per step; a few hundred steps of real training.
+        argv = ["--arch", "qwen1.5-0.5b",
+                "--steps", str(args.steps or 300), "--batch", "4",
+                "--seq", "256", "--lr", "1e-3", "--microbatches", "2",
+                "--ckpt-dir", "/tmp/repro_train_100m", "--ckpt-every", "100",
+                "--resume"]
+    final_loss = train_main(argv)
+    print(f"done; final loss {final_loss:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+from .registry import ARCHS, SHAPES, get_arch, get_smoke, input_specs, cells  # noqa: F401

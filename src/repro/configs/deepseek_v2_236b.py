@@ -1,0 +1,21 @@
+"""DeepSeek-V2 236B [arXiv:2405.04434]: 60L d=5120 128H MLA
+(q_lora 1536, kv_lora 512, nope 128 + rope 64, v 128); MoE: 160 routed
+top-6 + 2 shared experts, per-expert ff 1536, first layer dense (ff 12288);
+vocab 102400."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="deepseek-v2-236b", num_layers=60, d_model=5120, n_heads=128,
+    n_kv_heads=128, d_ff=12288, vocab_size=102400, attn_type="mla",
+    q_lora_rank=1536, kv_lora_rank=512, qk_nope_head_dim=128,
+    qk_rope_head_dim=64, v_head_dim=128,
+    moe=True, n_routed_experts=160, n_shared_experts=2, moe_top_k=6,
+    moe_d_ff=1536, first_k_dense=1, rope_theta=1e4, max_seq_len=32768)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-236b-smoke", num_layers=3, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=192, vocab_size=512, attn_type="mla", q_lora_rank=48,
+    kv_lora_rank=32, qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+    moe=True, n_routed_experts=8, n_shared_experts=2, moe_top_k=2,
+    moe_d_ff=48, first_k_dense=1, rope_theta=1e4, max_seq_len=256,
+    dtype="float32")

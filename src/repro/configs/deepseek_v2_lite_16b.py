@@ -1,0 +1,20 @@
+"""DeepSeek-V2-Lite 16B [arXiv:2405.04434]: 27L d=2048 16H MLA
+(no q_lora, kv_lora 512, nope 128 + rope 64, v 128); MoE: 64 routed top-6
++ 2 shared, per-expert ff 1408, first layer dense (ff 10944); vocab 102400."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="deepseek-v2-lite-16b", num_layers=27, d_model=2048, n_heads=16,
+    n_kv_heads=16, d_ff=10944, vocab_size=102400, attn_type="mla",
+    q_lora_rank=None, kv_lora_rank=512, qk_nope_head_dim=128,
+    qk_rope_head_dim=64, v_head_dim=128,
+    moe=True, n_routed_experts=64, n_shared_experts=2, moe_top_k=6,
+    moe_d_ff=1408, first_k_dense=1, rope_theta=1e4, max_seq_len=32768)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-lite-smoke", num_layers=3, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=192, vocab_size=512, attn_type="mla",
+    q_lora_rank=None, kv_lora_rank=32, qk_nope_head_dim=16,
+    qk_rope_head_dim=8, v_head_dim=16, moe=True, n_routed_experts=8,
+    n_shared_experts=2, moe_top_k=2, moe_d_ff=48, first_k_dense=1,
+    rope_theta=1e4, max_seq_len=256, dtype="float32")

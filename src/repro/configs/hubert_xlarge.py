@@ -1,0 +1,15 @@
+"""HuBERT-XLarge [arXiv:2106.07447]: 48L d=1280 16H ff=5120 encoder-only;
+masked-prediction over 504 cluster codebook.  The conv waveform frontend is
+a STUB — input_specs provides precomputed frame embeddings (paper-pool
+rule)."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hubert-xlarge", num_layers=48, d_model=1280, n_heads=16,
+    n_kv_heads=16, d_ff=5120, vocab_size=504, causal=False,
+    modality="audio", rope_theta=1e4, max_seq_len=32768)
+
+SMOKE = ModelConfig(
+    name="hubert-xlarge-smoke", num_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=160, vocab_size=64, causal=False, modality="audio",
+    rope_theta=1e4, max_seq_len=256, dtype="float32")

@@ -1,0 +1,22 @@
+"""Hymba-1.5B [arXiv:2411.13676]: 32L d=1600, parallel attn+mamba heads;
+25 attn heads (GQA kv 5, head_dim 64) + Mamba2 path (d_inner 3200, 50 ssm
+heads, state 16); sliding window 1024 with global attention at layers
+{0, 15, 31}; ff=5504; vocab 32001.
+
+Omitted vs. paper: the 128 learnable meta tokens (prompt-side detail,
+noted in DESIGN.md §Arch-applicability)."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hymba-1.5b", num_layers=32, d_model=1600, block_type="hybrid",
+    n_heads=25, n_kv_heads=5, head_dim=64, d_ff=5504, vocab_size=32001,
+    sliding_window=1024, global_attn_layers=(0, 15, 31),
+    ssm_state=16, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256, ssm_conv=4,
+    ssm_groups=1, rope_theta=1e4, max_seq_len=1048576)
+
+SMOKE = ModelConfig(
+    name="hymba-1.5b-smoke", num_layers=3, d_model=64, block_type="hybrid",
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=160, vocab_size=512,
+    sliding_window=16, global_attn_layers=(0, 2), ssm_state=16,
+    ssm_expand=2, ssm_head_dim=16, ssm_chunk=8, ssm_conv=4, ssm_groups=1,
+    rope_theta=1e4, max_seq_len=256, dtype="float32")

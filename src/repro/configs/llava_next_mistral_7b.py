@@ -1,0 +1,20 @@
+"""LLaVA-NeXT (Mistral-7B backbone) [hf:llava-hf/llava-v1.6-mistral-7b-hf]:
+32L d=4096 32H (GQA kv 8) ff=14336 vocab 32000.  CLIP vision tower is a
+STUB (input_specs provides 1024-d patch features); the 2-layer GELU
+mm-projector is real.  anyres tiling -> prefill uses 5x576 patch tokens.
+
+Note: the llava-1.6 Mistral backbone runs full (non-windowed) attention;
+long_500k is therefore skipped for this arch."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="llava-next-mistral-7b", num_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=8, head_dim=128, d_ff=14336, vocab_size=32000,
+    modality="vision", frontend_dim=1024, num_patches=576,
+    rope_theta=1e6, max_seq_len=32768)
+
+SMOKE = ModelConfig(
+    name="llava-next-mistral-smoke", num_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512, modality="vision",
+    frontend_dim=32, num_patches=8, rope_theta=1e6, max_seq_len=256,
+    dtype="float32")

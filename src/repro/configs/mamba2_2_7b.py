@@ -1,0 +1,16 @@
+"""Mamba2-2.7B [arXiv:2405.21060]: 64L d=2560, SSD attention-free;
+d_inner 5120 (expand 2), 80 heads of dim 64, state 128, conv 4, chunk 256;
+vocab 50280 (GPT-NeoX), tied embeddings."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-2.7b", num_layers=64, d_model=2560, block_type="ssm",
+    d_ff=0, n_heads=0, n_kv_heads=0, vocab_size=50280, tie_embeddings=True,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256, ssm_conv=4,
+    ssm_groups=1, max_seq_len=1048576)
+
+SMOKE = ModelConfig(
+    name="mamba2-2.7b-smoke", num_layers=3, d_model=64, block_type="ssm",
+    d_ff=0, n_heads=0, n_kv_heads=0, vocab_size=512, tie_embeddings=True,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=16, ssm_chunk=8, ssm_conv=4,
+    ssm_groups=1, max_seq_len=256, dtype="float32")

@@ -1,0 +1,19 @@
+"""MiniCPM3-4B [hf:openbmb/MiniCPM3-4B]: 62L d=2560 40H ff=6400,
+vocab 73448, MLA (q_lora 768, kv_lora 256, nope 64 + rope 32, v 64).
+
+Omitted vs. HF config: MiniCPM's mu-parametrization scaling constants
+(scale_emb/scale_depth) — orthogonal to structure/layout; noted in
+DESIGN.md."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="minicpm3-4b", num_layers=62, d_model=2560, n_heads=40,
+    n_kv_heads=40, d_ff=6400, vocab_size=73448, attn_type="mla",
+    q_lora_rank=768, kv_lora_rank=256, qk_nope_head_dim=64,
+    qk_rope_head_dim=32, v_head_dim=64, rope_theta=1e4, max_seq_len=32768)
+
+SMOKE = ModelConfig(
+    name="minicpm3-4b-smoke", num_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=160, vocab_size=512, attn_type="mla", q_lora_rank=48,
+    kv_lora_rank=32, qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+    rope_theta=1e4, max_seq_len=256, dtype="float32")

@@ -1,0 +1,13 @@
+"""Qwen1.5-0.5B [hf:Qwen/Qwen1.5-0.5B]: 24L d=1024 16H (kv 16) ff=2816,
+vocab 151936, QKV bias, tied embeddings."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen1.5-0.5b", num_layers=24, d_model=1024, n_heads=16,
+    n_kv_heads=16, d_ff=2816, vocab_size=151936, qkv_bias=True,
+    tie_embeddings=True, rope_theta=1e6, max_seq_len=32768)
+
+SMOKE = ModelConfig(
+    name="qwen1.5-0.5b-smoke", num_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=176, vocab_size=512, qkv_bias=True,
+    tie_embeddings=True, rope_theta=1e6, max_seq_len=256, dtype="float32")

@@ -1,0 +1,19 @@
+"""Qwen2.5-14B [hf]: 48L d=5120 40H (GQA kv 8) ff=13824, vocab 152064,
+QKV bias."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2.5-14b", num_layers=48, d_model=5120, n_heads=40,
+    n_kv_heads=8, head_dim=128, d_ff=13824, vocab_size=152064,
+    # head_pad_factor=2: (40q, 8kv) -> (80q, 16kv) pads heads onto the
+    # 16-way model axis (Perf iteration B1).  x2 padding preserves the GQA
+    # grouping i//5 exactly and the padded block is zero -> identical math;
+    # kills the partial-sharding all-reduce storm (2.2 TB/step -> see
+    # EXPERIMENTS.md SPerf).
+    head_pad_factor=2,
+    qkv_bias=True, rope_theta=1e6, max_seq_len=32768)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-14b-smoke", num_layers=2, d_model=64, n_heads=8,
+    n_kv_heads=2, head_dim=8, d_ff=128, vocab_size=512, qkv_bias=True,
+    rope_theta=1e6, max_seq_len=256, dtype="float32")

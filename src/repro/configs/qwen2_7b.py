@@ -1,0 +1,13 @@
+"""Qwen2-7B [arXiv:2407.10671]: 28L d=3584 28H (GQA kv 4) ff=18944,
+vocab 152064, QKV bias."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-7b", num_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    head_dim=128, d_ff=18944, vocab_size=152064, qkv_bias=True,
+    rope_theta=1e6, max_seq_len=32768)
+
+SMOKE = ModelConfig(
+    name="qwen2-7b-smoke", num_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    head_dim=16, d_ff=128, vocab_size=512, qkv_bias=True, rope_theta=1e6,
+    max_seq_len=256, dtype="float32")

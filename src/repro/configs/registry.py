@@ -1,0 +1,145 @@
+"""Architecture registry: ``--arch <id>`` lookup, shape grid, input specs.
+
+Each ``repro/configs/<id>.py`` exports ``FULL`` (the exact published config)
+and ``SMOKE`` (a reduced same-family config for CPU tests).  This module
+owns the (arch x shape) cell grid including the skip rules:
+
+* encoder-only archs have no autoregressive step -> decode shapes skipped;
+* ``long_500k`` requires sub-quadratic attention -> only SSM/hybrid run it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ARCH_IDS = [
+    "qwen1_5_0_5b", "qwen2_7b", "minicpm3_4b", "qwen2_5_14b",
+    "deepseek_v2_236b", "deepseek_v2_lite_16b", "hubert_xlarge",
+    "mamba2_2_7b", "llava_next_mistral_7b", "hymba_1_5b",
+]
+# public names with dashes/dots accepted too
+ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+ALIASES.update({"qwen1.5-0.5b": "qwen1_5_0_5b", "qwen2-7b": "qwen2_7b",
+                "minicpm3-4b": "minicpm3_4b", "qwen2.5-14b": "qwen2_5_14b",
+                "deepseek-v2-236b": "deepseek_v2_236b",
+                "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+                "hubert-xlarge": "hubert_xlarge", "mamba2-2.7b": "mamba2_2_7b",
+                "llava-next-mistral-7b": "llava_next_mistral_7b",
+                "hymba-1.5b": "hymba_1_5b"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+ARCHS: dict = {}
+
+
+def _load(arch_id: str):
+    if arch_id not in ARCHS:
+        mod = importlib.import_module(f"repro.configs.{arch_id}")
+        ARCHS[arch_id] = mod
+    return ARCHS[arch_id]
+
+
+def get_arch(name: str):
+    arch_id = ALIASES.get(name, name)
+    return _load(arch_id).FULL
+
+
+def get_smoke(name: str):
+    arch_id = ALIASES.get(name, name)
+    return _load(arch_id).SMOKE
+
+
+def skip_reason(arch_id: str, shape_name: str) -> Optional[str]:
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if not cfg.causal and shape.kind == "decode":
+        return "encoder-only: no autoregressive decode step"
+    if shape_name == "long_500k":
+        sub_quadratic = cfg.block_type in ("ssm", "hybrid")
+        if not sub_quadratic:
+            return ("full quadratic attention: 500k decode skipped per spec "
+                    "(see DESIGN.md §Arch-applicability)")
+    return None
+
+
+def cells(include_skipped: bool = False):
+    """The 10 x 4 grid with skip annotations."""
+    out = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            r = skip_reason(a, s)
+            if r is None or include_skipped:
+                out.append((a, s, r))
+    return out
+
+
+# --------------------------------------------------------------- input specs
+def input_specs(arch_name: str, shape_name: str, model=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    ``decode`` shapes need the cache pytree; pass a built ``model`` to avoid
+    rebuilding (dry-run does), else it is derived via ``jax.eval_shape``.
+    """
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    b, l = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    sd = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.modality == "audio":
+            batch = {"feats": sd((b, l, cfg.d_model), jnp.bfloat16),
+                     "mask_spans": sd((b, l), jnp.bool_)}
+            if shape.kind == "train":
+                batch["labels"] = sd((b, l), i32)
+                batch["loss_mask"] = sd((b, l), f32)
+            return {"batch": batch}
+        if cfg.modality == "vision":
+            npatch = cfg.num_patches if shape.kind == "train" \
+                else cfg.num_patches * 5  # anyres: base + 4 tiles
+            text = l - npatch
+            batch = {"tokens": sd((b, text), i32),
+                     "patches": sd((b, npatch, cfg.frontend_dim),
+                                   jnp.bfloat16)}
+            if shape.kind == "train":
+                batch["labels"] = sd((b, text), i32)
+            return {"batch": batch}
+        batch = {"tokens": sd((b, l), i32)}
+        if shape.kind == "train":
+            batch["labels"] = sd((b, l), i32)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len-deep cache
+    from repro.models.model import build_model
+    model = model or build_model(cfg)
+    caches = jax.eval_shape(
+        lambda: model.init_caches({"trunk": _trunk_like(cfg)}, b, l))
+    return {"token": sd((b, 1), i32),
+            "pos": sd((b,), i32),
+            "caches": caches}
+
+
+def _trunk_like(cfg):
+    """Minimal trunk stand-in for cache shaping (init_caches only reads the
+    segment plan, not the params)."""
+    from repro.models.transformer import plan_segments
+    return {"segments": [None] * len(plan_segments(cfg))}

@@ -1,0 +1,24 @@
+"""The paper's own workload config: SORT over MOT15-shaped streams.
+
+`PROD` sizes the tracking service for a production mesh: the stream axis is
+the population axis (sharded over pod x data), slot capacity covers paper
+Table I's max of 13 simultaneous objects with headroom."""
+import dataclasses
+
+from repro.core.sort import SortConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SortServiceConfig:
+    sort: SortConfig
+    streams_per_chip: int = 2048     # lane batch per device
+    frames_per_segment: int = 512    # scan length per device step
+
+
+FULL = SortServiceConfig(
+    sort=SortConfig(max_trackers=16, max_detections=16, iou_threshold=0.3,
+                    max_age=1, min_hits=3))
+
+SMOKE = SortServiceConfig(
+    sort=SortConfig(max_trackers=8, max_detections=8),
+    streams_per_chip=8, frames_per_segment=16)

@@ -1,0 +1,7 @@
+"""Core SORT library — the paper's contribution as composable JAX modules.
+
+Kalman filter (tiny-matrix batched), Hungarian assignment (lax), IoU
+association, slot-pool lifecycle, and the batched SortEngine.
+"""
+from . import association, bbox, hungarian, kalman, metrics, slots  # noqa: F401
+from .sort import SortConfig, SortEngine, SortOutput, SortState  # noqa: F401

@@ -1,0 +1,94 @@
+"""Detection <-> tracker association (paper §II-B, §III step "Assign").
+
+Builds the IoU cost matrix between Kalman-predicted boxes and the frame's
+detections, solves the assignment with the batched Hungarian solver, and
+gates matches below the IoU threshold — exactly the SORT recipe
+(``associate_detections_to_trackers`` in Bewley's reference code), but fully
+batched over streams with static shapes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import bbox, hungarian
+
+
+class Association(NamedTuple):
+    """All masks are aligned to the padded det/tracker slot axes.
+
+    ``det_to_trk [..., D] int32``: matched tracker slot per detection (or -1).
+    ``trk_to_det [..., T] int32``: matched detection per tracker slot (or -1).
+    ``matched_det [..., D] bool``  / ``matched_trk [..., T] bool``.
+    ``unmatched_det [..., D] bool``: valid detections that should seed births.
+    ``unmatched_trk [..., T] bool``: alive trackers that missed this frame.
+    """
+
+    det_to_trk: jnp.ndarray
+    trk_to_det: jnp.ndarray
+    matched_det: jnp.ndarray
+    matched_trk: jnp.ndarray
+    unmatched_det: jnp.ndarray
+    unmatched_trk: jnp.ndarray
+    iou: jnp.ndarray  # [..., D, T] full IoU matrix (for metrics / debugging)
+
+
+def associate(det_boxes: jnp.ndarray, det_mask: jnp.ndarray,
+              trk_boxes: jnp.ndarray, trk_mask: jnp.ndarray,
+              iou_threshold: float = 0.3,
+              iou_fn=None) -> Association:
+    """SORT association for a batch of streams.
+
+    det_boxes ``[..., D, 4]`` xyxy; trk_boxes ``[..., T, 4]`` xyxy (predicted);
+    masks flag valid rows.  ``iou_fn`` allows swapping in the Pallas kernel.
+    """
+    d = det_boxes.shape[-2]
+    t = trk_boxes.shape[-2]
+    n = max(d, t)
+    iou = (iou_fn or bbox.iou_matrix)(det_boxes, trk_boxes)  # [..., D, T]
+    cost = -iou
+    col4row = hungarian.solve_masked(cost, det_mask, trk_mask, n)  # [..., n]
+
+    det_idx = jnp.arange(d)
+    assigned_col = col4row[..., :d]                        # [..., D]
+    in_range = assigned_col < t
+    safe_col = jnp.where(in_range, assigned_col, 0)
+    pair_iou = jnp.take_along_axis(
+        iou, safe_col[..., None], axis=-1)[..., 0]         # iou of (det, its col)
+    pair_trk_valid = jnp.take_along_axis(
+        jnp.broadcast_to(trk_mask, iou.shape[:-2] + (t,)), safe_col, axis=-1)
+    good = (det_mask
+            & in_range
+            & pair_trk_valid
+            & (pair_iou >= iou_threshold))
+
+    det_to_trk = jnp.where(good, safe_col, -1).astype(jnp.int32)
+    # invert: tracker slot -> detection.  Scatter each good det's index into
+    # its tracker slot; invalid matches go to an overflow slot that is sliced
+    # off.  (The Hungarian solution is a matching, so no slot collides.)
+    batch = iou.shape[:-2]
+    overflow = jnp.full(batch + (t + 1,), -1, jnp.int32)
+    scatter_idx = jnp.where(good, safe_col, t)
+    src = jnp.broadcast_to(det_idx, det_to_trk.shape).astype(jnp.int32)
+    trk_to_det = _scatter_last(overflow, scatter_idx, src)[..., :t]
+
+    matched_det = good
+    matched_trk = trk_to_det >= 0
+    unmatched_det = det_mask & ~matched_det
+    unmatched_trk = trk_mask & ~matched_trk
+    return Association(det_to_trk, trk_to_det, matched_det, matched_trk,
+                       unmatched_det, unmatched_trk, iou)
+
+
+def _scatter_last(buf: jnp.ndarray, idx: jnp.ndarray, src: jnp.ndarray) -> jnp.ndarray:
+    """Scatter ``src`` into ``buf`` along the last axis at ``idx`` (batched)."""
+    # one-hot matmul-free scatter: use take_along_axis-compatible at[] with
+    # explicit batch iota via vmapped scatter -- jnp supports batched .at when
+    # we flatten the batch.
+    b = buf.reshape((-1, buf.shape[-1]))
+    i = idx.reshape((-1, idx.shape[-1]))
+    s = src.reshape((-1, src.shape[-1]))
+    rows = jnp.arange(b.shape[0])[:, None]
+    out = b.at[rows, i].set(s)
+    return out.reshape(buf.shape)

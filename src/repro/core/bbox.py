@@ -1,0 +1,61 @@
+"""Bounding-box geometry for SORT.
+
+SORT's observation vector is ``z = [u, v, s, r]`` where ``(u, v)`` is the box
+center, ``s`` the area (scale) and ``r`` the aspect ratio (w/h, modeled as
+constant).  Boxes on the wire are ``[x1, y1, x2, y2]``.
+
+All functions are shape-polymorphic over leading batch axes and jit/vmap safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def xyxy_to_z(box: jnp.ndarray) -> jnp.ndarray:
+    """``[..., 4] (x1,y1,x2,y2) -> [..., 4] (u,v,s,r)``."""
+    x1, y1, x2, y2 = box[..., 0], box[..., 1], box[..., 2], box[..., 3]
+    w = x2 - x1
+    h = y2 - y1
+    u = x1 + w / 2.0
+    v = y1 + h / 2.0
+    s = w * h
+    r = w / jnp.maximum(h, _EPS)
+    return jnp.stack([u, v, s, r], axis=-1)
+
+
+def z_to_xyxy(z: jnp.ndarray) -> jnp.ndarray:
+    """``[..., >=4] (u,v,s,r,...) -> [..., 4] (x1,y1,x2,y2)``.
+
+    Accepts the full 7-dim Kalman state as well (extra dims ignored).
+    Negative predicted areas (possible transiently before SORT's scale-velocity
+    clamp) are clamped to zero so the sqrt stays finite.
+    """
+    u, v, s, r = z[..., 0], z[..., 1], z[..., 2], z[..., 3]
+    s = jnp.maximum(s, 0.0)
+    r = jnp.maximum(r, _EPS)
+    w = jnp.sqrt(s * r)
+    h = s / jnp.maximum(w, _EPS)
+    return jnp.stack([u - w / 2.0, v - h / 2.0, u + w / 2.0, v + h / 2.0], axis=-1)
+
+
+def iou_matrix(boxes_a: jnp.ndarray, boxes_b: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise IoU.
+
+    ``boxes_a: [..., A, 4]``, ``boxes_b: [..., B, 4]`` -> ``[..., A, B]``.
+    Degenerate boxes produce IoU 0.
+    """
+    a = boxes_a[..., :, None, :]
+    b = boxes_b[..., None, :, :]
+    ix1 = jnp.maximum(a[..., 0], b[..., 0])
+    iy1 = jnp.maximum(a[..., 1], b[..., 1])
+    ix2 = jnp.minimum(a[..., 2], b[..., 2])
+    iy2 = jnp.minimum(a[..., 3], b[..., 3])
+    iw = jnp.maximum(ix2 - ix1, 0.0)
+    ih = jnp.maximum(iy2 - iy1, 0.0)
+    inter = iw * ih
+    area_a = jnp.maximum(a[..., 2] - a[..., 0], 0.0) * jnp.maximum(a[..., 3] - a[..., 1], 0.0)
+    area_b = jnp.maximum(b[..., 2] - b[..., 0], 0.0) * jnp.maximum(b[..., 3] - b[..., 1], 0.0)
+    union = area_a + area_b - inter
+    return inter / jnp.maximum(union, _EPS)

@@ -1,0 +1,98 @@
+"""Greedy association — ablation baseline for the Hungarian solver.
+
+Real-time trackers often replace the optimal assignment with greedy
+best-first matching (O(n^2 log n), trivially vectorizable).  SORT's paper
+uses the Hungarian method; this module quantifies what the optimal solver
+buys (see ``benchmarks/association_ablation.py``): greedy is ~identical on
+easy scenes and degrades under dense/ambiguous detections.
+
+Batched, static-shape, jit/vmap-safe like :mod:`repro.core.hungarian`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def greedy_assign(iou: jnp.ndarray, det_mask: jnp.ndarray,
+                  trk_mask: jnp.ndarray, iou_threshold: float = 0.3):
+    """Best-first matching on an IoU matrix.
+
+    ``iou [..., D, T]``; returns ``det_to_trk [..., D] int32`` (-1 =
+    unmatched).  Iteratively takes the globally best remaining pair above
+    the threshold — ``min(D, T)`` rounds of masked argmax.
+    """
+    d, t = iou.shape[-2], iou.shape[-1]
+    batch = iou.shape[:-2]
+    valid = (det_mask[..., :, None] & trk_mask[..., None, :]
+             & (iou >= iou_threshold))
+    score = jnp.where(valid, iou, -1.0)
+    n_rounds = min(d, t)
+
+    def body(carry, _):
+        score, out = carry
+        flat = score.reshape(batch + (d * t,))
+        idx = jnp.argmax(flat, axis=-1)
+        best = jnp.take_along_axis(flat, idx[..., None], -1)[..., 0]
+        di, ti = idx // t, idx % t
+        ok = best > 0.0
+        # record the match
+        upd = jnp.where(ok, ti.astype(jnp.int32), -1)
+        out = _set_at(out, jnp.where(ok, di, d), upd)          # overflow row d
+        # retire the matched row and column
+        row_dead = jnp.arange(d) == jnp.where(ok, di, -1)[..., None]
+        col_dead = jnp.arange(t) == jnp.where(ok, ti, -1)[..., None]
+        score = jnp.where(row_dead[..., None] | col_dead[..., None, :],
+                          -1.0, score)
+        return (score, out), None
+
+    out0 = jnp.full(batch + (d,), -1, jnp.int32)
+    (_, out), _ = lax.scan(body, (score, out0), None, length=n_rounds)
+    return out
+
+
+def _set_at(buf, idx, val):
+    """Batched ``buf[..., idx] = val`` with an overflow slot."""
+    d = buf.shape[-1]
+    ext = jnp.concatenate([buf, jnp.full(buf.shape[:-1] + (1,), -1,
+                                         buf.dtype)], -1)
+    flat = ext.reshape(-1, d + 1)
+    rows = jnp.arange(flat.shape[0])
+    flat = flat.at[rows, idx.reshape(-1)].set(val.reshape(-1))
+    return flat.reshape(ext.shape)[..., :d]
+
+
+def greedy_iou_fn_for_engine(iou_threshold: float = 0.3):
+    """Adapter producing an ``associate``-compatible replacement (used by
+    the ablation benchmark; the SortEngine path stays Hungarian)."""
+    from . import association
+
+    def associate_greedy(det_boxes, det_mask, trk_boxes, trk_mask,
+                         thr=iou_threshold, iou_fn=None):
+        from . import bbox
+        iou = (iou_fn or bbox.iou_matrix)(det_boxes, trk_boxes)
+        det_to_trk = greedy_assign(iou, det_mask, trk_mask, thr)
+        d, t = iou.shape[-2], iou.shape[-1]
+        batch = iou.shape[:-2]
+        good = det_to_trk >= 0
+        safe = jnp.where(good, det_to_trk, 0)
+        overflow = jnp.full(batch + (t + 1,), -1, jnp.int32)
+        scatter_idx = jnp.where(good, safe, t)
+        src = jnp.broadcast_to(jnp.arange(d), det_to_trk.shape) \
+            .astype(jnp.int32)
+        flat = overflow.reshape(-1, t + 1)
+        rows = jnp.arange(flat.shape[0])[:, None]
+        trk_to_det = flat.at[
+            rows, scatter_idx.reshape(-1, d)].set(
+            src.reshape(-1, d)).reshape(batch + (t + 1,))[..., :t]
+        matched_trk = trk_to_det >= 0
+        return association.Association(
+            det_to_trk=jnp.where(good, safe, -1).astype(jnp.int32),
+            trk_to_det=trk_to_det,
+            matched_det=good, matched_trk=matched_trk,
+            unmatched_det=det_mask & ~good,
+            unmatched_trk=trk_mask & ~matched_trk,
+            iou=iou)
+
+    return associate_greedy

@@ -1,0 +1,154 @@
+"""Hungarian algorithm (linear sum assignment) in pure JAX ``lax`` control flow.
+
+The paper uses the Hungarian method in matrix form to match Kalman
+predictions to detections.  The cost matrices are tiny (<= ~13x13, paper
+Table I), so the right TPU strategy is the one the paper argues for threads:
+never split one matrix — batch *many* matrices and solve them in parallel
+lanes.  This module is written so the full solver ``vmap``s over a leading
+batch axis with static shapes.
+
+Algorithm: shortest-augmenting-path / Jonker-Volgenant variant, O(n^3), the
+same scheme scipy's ``linear_sum_assignment`` uses, expressed with
+``lax.fori_loop`` (rows) + ``lax.while_loop`` (Dijkstra + augmentation).
+
+Masked / rectangular problems are handled by padding to a fixed ``n x n``
+matrix with a large constant ``PAD``: because every pad entry has the *same*
+cost, the optimum on the valid ``D x T`` submatrix is preserved and the
+number of real-real matches is maximized (PAD dominates any real cost range).
+Validated against scipy in ``tests/test_hungarian.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_INF = 1.0e18
+
+
+def auto_pad_value(cost: jnp.ndarray, valid: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Pad cost that (a) always loses to any real match and (b) stays inside
+    float32 precision of the real cost range.
+
+    A fixed huge constant (1e6) breaks in float32: reduced costs mix the pad
+    scale with the real scale and the real costs quantize away.  Instead use
+    ``cmax + n * (cmax - cmin) + 1`` per problem: swapping one real match for
+    a pad match then always increases the total, so the solver still
+    maximizes the number of real-real matches.
+    """
+    big = jnp.where(valid, cost, -_INF)
+    small = jnp.where(valid, cost, _INF)
+    cmax = jnp.maximum(big.max(axis=(-2, -1)), 0.0)
+    cmin = jnp.minimum(small.min(axis=(-2, -1)), 0.0)
+    return cmax + n * (cmax - cmin) + 1.0
+
+
+def pad_cost_matrix(cost: jnp.ndarray, row_mask: jnp.ndarray, col_mask: jnp.ndarray,
+                    n: int, pad_value=None) -> jnp.ndarray:
+    """Embed a masked ``[..., R, C]`` cost into an ``[..., n, n]`` padded square
+    matrix.  ``pad_value=None`` selects the precision-safe adaptive pad."""
+    r, c = cost.shape[-2], cost.shape[-1]
+    assert n >= r and n >= c, (n, r, c)
+    valid = row_mask[..., :, None] & col_mask[..., None, :]
+    if pad_value is None:
+        pad_value = auto_pad_value(cost, valid, n)
+    pad_value = jnp.asarray(pad_value, cost.dtype)[..., None, None]
+    out = jnp.broadcast_to(pad_value, cost.shape[:-2] + (n, n)).copy()
+    block = jnp.where(valid, cost, pad_value)
+    return out.at[..., :r, :c].set(block)
+
+
+def solve(cost: jnp.ndarray) -> jnp.ndarray:
+    """Solve one ``[n, n]`` assignment problem.
+
+    Returns ``col4row [n] int32``: column assigned to each row.  Total cost
+    ``cost[arange(n), col4row].sum()`` is minimal.
+    """
+    n = cost.shape[-1]
+    assert cost.shape == (n, n), cost.shape
+    cost = cost.astype(jnp.float32)
+
+    def solve_row(cur_row, carry):
+        u, v, col4row, row4col = carry
+        # --- Dijkstra over columns to find an augmenting path from cur_row ---
+        spc = jnp.full((n,), _INF)       # shortest path cost to each column
+        path = jnp.full((n,), -1, jnp.int32)  # predecessor row per column
+        sr = jnp.zeros((n,), bool)       # scanned rows
+        sc = jnp.zeros((n,), bool)       # scanned cols
+
+        def cond(st):
+            _i, _min_val, sink, *_ = st
+            return sink < 0
+
+        def body(st):
+            i, min_val, sink, spc, path, sr, sc = st
+            sr = sr.at[i].set(True)
+            red = min_val + cost[i, :] - u[i] - v
+            upd = (~sc) & (red < spc)
+            spc = jnp.where(upd, red, spc)
+            path = jnp.where(upd, i, path)
+            # pick the cheapest unscanned column (ties broken arbitrarily --
+            # any minimum keeps Dijkstra invariants and the optimal cost)
+            masked = jnp.where(sc, _INF, spc)
+            j = jnp.argmin(masked).astype(jnp.int32)
+            min_val = spc[j]
+            sc = sc.at[j].set(True)
+            free = row4col[j] < 0
+            sink = jnp.where(free, j, jnp.int32(-1))
+            i = jnp.where(free, i, row4col[j])
+            return i, min_val, sink, spc, path, sr, sc
+
+        init = (jnp.int32(cur_row), jnp.float32(0.0), jnp.int32(-1), spc, path, sr, sc)
+        _, min_val, sink, spc, path, sr, sc = lax.while_loop(cond, body, init)
+
+        # --- dual updates (scipy rectangular_lsap convention) ---
+        u = u.at[cur_row].add(min_val)
+        others = sr & (jnp.arange(n) != cur_row)
+        u = jnp.where(others, u + min_val - spc[jnp.clip(col4row, 0, n - 1)], u)
+        v = jnp.where(sc, v + spc - min_val, v)
+
+        # --- augment along the alternating path back from sink ---
+        def aug_cond(st):
+            _c4r, _r4c, _j, done = st
+            return ~done
+
+        def aug_body(st):
+            col4row, row4col, j, _done = st
+            i = path[j]
+            row4col = row4col.at[j].set(i)
+            nxt = col4row[i]
+            col4row = col4row.at[i].set(j)
+            return col4row, row4col, nxt, i == cur_row
+
+        col4row, row4col, _, _ = lax.while_loop(
+            aug_cond, aug_body, (col4row, row4col, sink, jnp.bool_(False)))
+        return u, v, col4row, row4col
+
+    u0 = jnp.zeros((n,), jnp.float32)
+    v0 = jnp.zeros((n,), jnp.float32)
+    c4r0 = jnp.full((n,), -1, jnp.int32)
+    r4c0 = jnp.full((n,), -1, jnp.int32)
+    _, _, col4row, _ = lax.fori_loop(0, n, solve_row, (u0, v0, c4r0, r4c0))
+    return col4row
+
+
+def solve_batched(cost: jnp.ndarray) -> jnp.ndarray:
+    """``[..., n, n] -> [..., n]`` — vmapped over all leading axes."""
+    batch = cost.shape[:-2]
+    n = cost.shape[-1]
+    flat = cost.reshape((-1, n, n))
+    out = jax.vmap(solve)(flat)
+    return out.reshape(batch + (n,))
+
+
+def solve_masked(cost: jnp.ndarray, row_mask: jnp.ndarray, col_mask: jnp.ndarray,
+                 n: int) -> jnp.ndarray:
+    """Masked rectangular assignment.
+
+    Returns ``col4row [..., n]`` where entry ``i`` is the assigned column for
+    row ``i``, or an arbitrary pad column when row ``i`` is invalid or was
+    matched to padding.  Callers must re-validate matches (e.g. by IoU gate);
+    SORT does this anyway.
+    """
+    padded = pad_cost_matrix(cost, row_mask, col_mask, n)
+    return solve_batched(padded)

@@ -1,0 +1,166 @@
+"""Batched constant-velocity Kalman filter — the SORT motion model.
+
+State (paper Table II): ``x = [u, v, s, r, du, dv, ds]`` (dim_x = 7),
+observation ``z = [u, v, s, r]`` (dim_z = 4).  ``F`` is the constant-velocity
+transition, ``H`` selects the first four state components.
+
+The paper's central observation is that these matrices are *extremely small*
+(7x7, 4x7, 4x4): no single filter can use a wide machine.  We therefore keep
+the filter *structure-of-arrays batched*: every function takes states with an
+arbitrary leading batch shape ``[...,]`` and performs the tiny-matrix algebra
+as trace-time-unrolled einsums so the batch axis lands on the vector lanes.
+
+The innovation covariance ``S`` is 4x4; we invert it with a branch-free
+closed-form blockwise inverse (exact for SPD matrices) instead of Cholesky —
+see DESIGN.md §2 "What did NOT transfer".
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+DIM_X = 7
+DIM_Z = 4
+
+# --- SORT's filter constants (Bewley et al. reference implementation). ---
+
+
+def transition_matrix(dtype=jnp.float32) -> jnp.ndarray:
+    f = np.eye(DIM_X)
+    f[0, 4] = 1.0  # u  += du
+    f[1, 5] = 1.0  # v  += dv
+    f[2, 6] = 1.0  # s  += ds
+    return jnp.asarray(f, dtype)
+
+
+def observation_matrix(dtype=jnp.float32) -> jnp.ndarray:
+    h = np.zeros((DIM_Z, DIM_X))
+    h[np.arange(4), np.arange(4)] = 1.0
+    return jnp.asarray(h, dtype)
+
+
+def measurement_noise(dtype=jnp.float32) -> jnp.ndarray:
+    r = np.eye(DIM_Z)
+    r[2, 2] = 10.0
+    r[3, 3] = 10.0
+    return jnp.asarray(r, dtype)
+
+
+def process_noise(dtype=jnp.float32) -> jnp.ndarray:
+    q = np.eye(DIM_X)
+    q[4, 4] = 0.01
+    q[5, 5] = 0.01
+    q[6, 6] = 1e-4
+    return jnp.asarray(q, dtype)
+
+
+def initial_covariance(dtype=jnp.float32) -> jnp.ndarray:
+    p = np.eye(DIM_X) * 10.0
+    p[4, 4] = p[5, 5] = p[6, 6] = 1e4  # high uncertainty on unobserved velocities
+    return jnp.asarray(p, dtype)
+
+
+class KalmanParams(NamedTuple):
+    """Static filter matrices, shared by every tracker in every stream."""
+
+    F: jnp.ndarray  # [7, 7]
+    H: jnp.ndarray  # [4, 7]
+    Q: jnp.ndarray  # [7, 7]
+    R: jnp.ndarray  # [4, 4]
+
+    @staticmethod
+    def default(dtype=jnp.float32) -> "KalmanParams":
+        return KalmanParams(
+            F=transition_matrix(dtype),
+            H=observation_matrix(dtype),
+            Q=process_noise(dtype),
+            R=measurement_noise(dtype),
+        )
+
+
+def init_state(z: jnp.ndarray, dtype=jnp.float32):
+    """Seed a tracker from an observation ``z [..., 4]``.
+
+    Returns ``(x [..., 7], P [..., 7, 7])`` with zero velocity and the SORT
+    initial covariance.
+    """
+    batch = z.shape[:-1]
+    x = jnp.concatenate([z, jnp.zeros(batch + (3,), dtype)], axis=-1)
+    p = jnp.broadcast_to(initial_covariance(dtype), batch + (DIM_X, DIM_X))
+    return x.astype(dtype), p
+
+
+def predict(x: jnp.ndarray, p: jnp.ndarray, params: KalmanParams):
+    """Time update: ``x <- F x``, ``P <- F P F^T + Q``.
+
+    SORT detail: if the predicted scale would go non-positive, the scale
+    velocity is zeroed first (a tracked box cannot invert).
+    """
+    ds = jnp.where(x[..., 2] + x[..., 6] <= 0.0, 0.0, x[..., 6])
+    x = x.at[..., 6].set(ds)
+    x_new = jnp.einsum("ij,...j->...i", params.F, x)
+    p_new = jnp.einsum("ij,...jk,lk->...il", params.F, p, params.F) + params.Q
+    return x_new, p_new
+
+
+def inv4_spd(s: jnp.ndarray) -> jnp.ndarray:
+    """Branch-free blockwise inverse of a batch of SPD 4x4 matrices.
+
+    ``S = [[A, B], [B^T, D]]`` with 2x2 blocks; uses the Schur complement of
+    ``A``.  Exact for SPD inputs (A is then invertible).
+    """
+    a = s[..., :2, :2]
+    b = s[..., :2, 2:]
+    c = s[..., 2:, :2]
+    d = s[..., 2:, 2:]
+    a_inv = inv2(a)
+    # Schur complement of A: D - C A^-1 B  (2x2)
+    schur = d - jnp.einsum("...ij,...jk,...kl->...il", c, a_inv, b)
+    schur_inv = inv2(schur)
+    aib = jnp.einsum("...ij,...jk->...ik", a_inv, b)   # A^-1 B
+    cai = jnp.einsum("...ij,...jk->...ik", c, a_inv)   # C A^-1
+    top_left = a_inv + jnp.einsum("...ij,...jk,...kl->...il", aib, schur_inv, cai)
+    top_right = -jnp.einsum("...ij,...jk->...ik", aib, schur_inv)
+    bot_left = -jnp.einsum("...ij,...jk->...ik", schur_inv, cai)
+    top = jnp.concatenate([top_left, top_right], axis=-1)
+    bot = jnp.concatenate([bot_left, schur_inv], axis=-1)
+    return jnp.concatenate([top, bot], axis=-2)
+
+
+def inv2(m: jnp.ndarray) -> jnp.ndarray:
+    """Closed-form inverse of a batch of 2x2 matrices."""
+    a, b = m[..., 0, 0], m[..., 0, 1]
+    c, d = m[..., 1, 0], m[..., 1, 1]
+    det = a * d - b * c
+    inv_det = 1.0 / det
+    row0 = jnp.stack([d * inv_det, -b * inv_det], axis=-1)
+    row1 = jnp.stack([-c * inv_det, a * inv_det], axis=-1)
+    return jnp.stack([row0, row1], axis=-2)
+
+
+def update(x: jnp.ndarray, p: jnp.ndarray, z: jnp.ndarray, params: KalmanParams):
+    """Measurement update.
+
+    ``y = z - Hx``; ``S = H P H^T + R``; ``K = P H^T S^-1``;
+    ``x <- x + K y``; ``P <- (I - K H) P`` (Joseph-free form, as filterpy/SORT).
+    """
+    y = z - jnp.einsum("ij,...j->...i", params.H, x)
+    pht = jnp.einsum("...ij,kj->...ik", p, params.H)           # [..., 7, 4]
+    s = jnp.einsum("ij,...jk->...ik", params.H, pht) + params.R  # [..., 4, 4]
+    s_inv = inv4_spd(s)
+    k = jnp.einsum("...ij,...jk->...ik", pht, s_inv)           # [..., 7, 4]
+    x_new = x + jnp.einsum("...ij,...j->...i", k, y)
+    ikh = jnp.eye(DIM_X, dtype=p.dtype) - jnp.einsum("...ij,jk->...ik", k, params.H)
+    p_new = jnp.einsum("...ij,...jk->...ik", ikh, p)
+    return x_new, p_new
+
+
+def masked_update(x, p, z, mask, params: KalmanParams):
+    """Apply ``update`` only where ``mask [...,]`` is True (static shapes)."""
+    x_u, p_u = update(x, p, z, params)
+    m = mask[..., None]
+    x_out = jnp.where(m, x_u, x)
+    p_out = jnp.where(mask[..., None, None], p_u, p)
+    return x_out, p_out

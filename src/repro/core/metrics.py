@@ -1,0 +1,58 @@
+"""Tracking quality metrics (MOTA-style) for validating the engine.
+
+Used by tests and ``benchmarks/datasets.py`` to confirm the batched engine
+tracks as well as the reference — the paper validates by matching the
+original code's output; we do the same plus aggregate metrics.
+"""
+from __future__ import annotations
+
+import numpy as np
+from scipy.optimize import linear_sum_assignment
+
+
+def frame_matches(gt_boxes, gt_mask, out_boxes, out_mask, iou_thr=0.5):
+    """Match GT to tracker output in one frame; returns (tp, fp, fn, pairs)."""
+    g = np.where(gt_mask)[0]
+    o = np.where(out_mask)[0]
+    if len(g) == 0 or len(o) == 0:
+        return 0, len(o), len(g), []
+    iou = _iou_mat(gt_boxes[g], out_boxes[o])
+    ri, ci = linear_sum_assignment(-iou)
+    pairs = [(g[i], o[j]) for i, j in zip(ri, ci) if iou[i, j] >= iou_thr]
+    tp = len(pairs)
+    return tp, len(o) - tp, len(g) - tp, pairs
+
+
+def mota(gt_boxes, gt_mask, out_boxes, out_uids, out_emit, iou_thr=0.5):
+    """Multi-Object Tracking Accuracy + id switches over one sequence.
+
+    ``gt_boxes [F, K, 4]``, ``gt_mask [F, K]``; tracker outputs
+    ``out_boxes [F, T, 4]``, ``out_uids [F, T]``, ``out_emit [F, T]``.
+    """
+    f = gt_boxes.shape[0]
+    tp = fp = fn = idsw = 0
+    last_uid = {}  # gt index -> last matched tracker uid
+    for t in range(f):
+        tpi, fpi, fni, pairs = frame_matches(
+            gt_boxes[t], gt_mask[t], out_boxes[t], out_emit[t], iou_thr)
+        tp, fp, fn = tp + tpi, fp + fpi, fn + fni
+        for gi, oi in pairs:
+            uid = int(out_uids[t, oi])
+            if gi in last_uid and last_uid[gi] != uid:
+                idsw += 1
+            last_uid[gi] = uid
+    n_gt = int(gt_mask.sum())
+    value = 1.0 - (fn + fp + idsw) / max(n_gt, 1)
+    return {"mota": value, "tp": tp, "fp": fp, "fn": fn,
+            "id_switches": idsw, "num_gt": n_gt}
+
+
+def _iou_mat(a, b):
+    ix1 = np.maximum(a[:, None, 0], b[None, :, 0])
+    iy1 = np.maximum(a[:, None, 1], b[None, :, 1])
+    ix2 = np.minimum(a[:, None, 2], b[None, :, 2])
+    iy2 = np.minimum(a[:, None, 3], b[None, :, 3])
+    inter = np.maximum(ix2 - ix1, 0) * np.maximum(iy2 - iy1, 0)
+    aa = np.maximum(a[:, 2] - a[:, 0], 0) * np.maximum(a[:, 3] - a[:, 1], 0)
+    ab = np.maximum(b[:, 2] - b[:, 0], 0) * np.maximum(b[:, 3] - b[:, 1], 0)
+    return inter / np.maximum(aa[:, None] + ab[None, :] - inter, 1e-9)

@@ -1,0 +1,139 @@
+"""Reference SORT — faithful per-stream numpy/scipy port of Bewley et al.
+
+This mirrors the *original Python* implementation the paper profiles
+(object-oriented, one KalmanBoxTracker per object, per-op numpy dispatch,
+scipy Hungarian).  It serves two purposes:
+
+1. **Oracle** for the batched JAX engine (``tests/test_sort.py`` checks the
+   two produce identical track IDs/boxes on synthetic data).
+2. **Baseline** for ``benchmarks/speedup.py`` — the analogue of the paper's
+   Table V (their C rewrite vs. the original Python; here: fused jitted
+   batch vs. per-op interpreted loop).
+"""
+from __future__ import annotations
+
+import numpy as np
+from scipy.optimize import linear_sum_assignment
+
+
+def xyxy_to_z(box):
+    w = box[2] - box[0]
+    h = box[3] - box[1]
+    return np.array([box[0] + w / 2.0, box[1] + h / 2.0, w * h, w / max(h, 1e-9)])
+
+
+def z_to_xyxy(x):
+    s = max(x[2], 0.0)
+    r = max(x[3], 1e-9)
+    w = np.sqrt(s * r)
+    h = s / max(w, 1e-9)
+    return np.array([x[0] - w / 2, x[1] - h / 2, x[0] + w / 2, x[1] + h / 2])
+
+
+def iou(a, b):
+    ix1, iy1 = max(a[0], b[0]), max(a[1], b[1])
+    ix2, iy2 = min(a[2], b[2]), min(a[3], b[3])
+    iw, ih = max(ix2 - ix1, 0.0), max(iy2 - iy1, 0.0)
+    inter = iw * ih
+    ua = max(a[2] - a[0], 0) * max(a[3] - a[1], 0)
+    ub = max(b[2] - b[0], 0) * max(b[3] - b[1], 0)
+    return inter / max(ua + ub - inter, 1e-9)
+
+
+class KalmanBoxTracker:
+    """One tracker, constant-velocity model — filterpy-equivalent numpy."""
+
+    def __init__(self, box, uid):
+        dim_x, dim_z = 7, 4
+        self.F = np.eye(dim_x)
+        self.F[0, 4] = self.F[1, 5] = self.F[2, 6] = 1.0
+        self.H = np.zeros((dim_z, dim_x))
+        self.H[np.arange(4), np.arange(4)] = 1.0
+        self.R = np.diag([1.0, 1.0, 10.0, 10.0])
+        self.Q = np.diag([1.0, 1.0, 1.0, 1.0, 0.01, 0.01, 1e-4])
+        self.P = np.diag([10.0, 10, 10, 10, 1e4, 1e4, 1e4])
+        self.x = np.zeros(dim_x)
+        self.x[:4] = xyxy_to_z(box)
+        self.uid = uid
+        self.time_since_update = 0
+        self.hits = 0
+        self.hit_streak = 0
+        self.age = 0
+
+    def predict(self):
+        if self.x[2] + self.x[6] <= 0:
+            self.x[6] = 0.0
+        self.x = self.F @ self.x
+        self.P = self.F @ self.P @ self.F.T + self.Q
+        self.age += 1
+        if self.time_since_update > 0:
+            self.hit_streak = 0
+        self.time_since_update += 1
+        return z_to_xyxy(self.x)
+
+    def update(self, box):
+        self.time_since_update = 0
+        self.hits += 1
+        self.hit_streak += 1
+        z = xyxy_to_z(box)
+        y = z - self.H @ self.x
+        s = self.H @ self.P @ self.H.T + self.R
+        k = self.P @ self.H.T @ np.linalg.inv(s)
+        self.x = self.x + k @ y
+        self.P = (np.eye(7) - k @ self.H) @ self.P
+
+
+class Sort:
+    """Per-stream SORT, Bewley-reference semantics."""
+
+    def __init__(self, max_age=1, min_hits=3, iou_threshold=0.3):
+        self.max_age = max_age
+        self.min_hits = min_hits
+        self.iou_threshold = iou_threshold
+        self.trackers: list[KalmanBoxTracker] = []
+        self.frame_count = 0
+        self.next_uid = 1
+
+    def update(self, dets: np.ndarray):
+        """``dets [D, 4]`` xyxy -> list of ``(x1, y1, x2, y2, uid)``."""
+        self.frame_count += 1
+        preds = [t.predict() for t in self.trackers]
+
+        # associate
+        matches, unmatched_dets, unmatched_trks = self._associate(dets, preds)
+        for d, t in matches:
+            self.trackers[t].update(dets[d])
+        for d in unmatched_dets:
+            self.trackers.append(KalmanBoxTracker(dets[d], self.next_uid))
+            self.next_uid += 1
+
+        out = []
+        kept = []
+        for t in self.trackers:
+            if t.time_since_update < 1 and (
+                    t.hit_streak >= self.min_hits
+                    or self.frame_count <= self.min_hits):
+                out.append(np.concatenate([z_to_xyxy(t.x), [t.uid]]))
+            if t.time_since_update <= self.max_age:
+                kept.append(t)
+        self.trackers = kept
+        return out
+
+    def _associate(self, dets, preds):
+        nd, nt = len(dets), len(preds)
+        if nd == 0 or nt == 0:
+            return [], list(range(nd)), list(range(nt))
+        mat = np.zeros((nd, nt))
+        for i in range(nd):
+            for j in range(nt):
+                mat[i, j] = iou(dets[i], preds[j])
+        ri, ci = linear_sum_assignment(-mat)
+        matches, md, mt = [], set(), set()
+        for i, j in zip(ri, ci):
+            if mat[i, j] >= self.iou_threshold:
+                matches.append((i, j))
+                md.add(i)
+                mt.add(j)
+        return (matches,
+                [i for i in range(nd) if i not in md],
+                [j for j in range(nt) if j not in mt])

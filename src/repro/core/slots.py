@@ -1,0 +1,146 @@
+"""Fixed-capacity slot pools — static-shape lifecycle management.
+
+JAX requires static shapes, but both of this framework's dynamic populations
+— SORT trackers (born on unmatched detections, killed after ``max_age``
+misses) and decode-server sequences (admitted on request, evicted on EOS) —
+grow and shrink per step.  The paper manages trackers with Python list
+append/delete; the TPU-native equivalent is a fixed pool of ``T`` slots per
+stream with an ``alive`` mask and branch-free claim/kill operations.
+
+This module is deliberately generic: ``repro.core.sort`` uses it for
+trackers and ``repro.serving`` uses it for continuous batching.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class SlotPool(NamedTuple):
+    """Per-slot lifecycle bookkeeping. All fields ``[..., T]`` (+ scalar uid ctr).
+
+    ``alive``: slot holds a live entity.
+    ``age``: steps since birth.
+    ``hits``: total successful updates (matches).
+    ``hit_streak``: consecutive successful updates.
+    ``time_since_update``: steps since last successful update.
+    ``uid``: globally unique id (per stream), -1 when dead.
+    ``next_uid``: ``[...]`` per-stream counter for id assignment.
+    """
+
+    alive: jnp.ndarray
+    age: jnp.ndarray
+    hits: jnp.ndarray
+    hit_streak: jnp.ndarray
+    time_since_update: jnp.ndarray
+    uid: jnp.ndarray
+    next_uid: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return self.alive.shape[-1]
+
+    @property
+    def num_alive(self) -> jnp.ndarray:
+        return self.alive.sum(axis=-1)
+
+
+def init_pool(batch_shape: tuple, capacity: int, uid_start: int = 1) -> SlotPool:
+    shape = batch_shape + (capacity,)
+    z = jnp.zeros(shape, jnp.int32)
+    return SlotPool(
+        alive=jnp.zeros(shape, bool),
+        age=z, hits=z, hit_streak=z, time_since_update=z,
+        uid=jnp.full(shape, -1, jnp.int32),
+        next_uid=jnp.full(batch_shape, uid_start, jnp.int32),
+    )
+
+
+def assign_slots(free_mask: jnp.ndarray, want_mask: jnp.ndarray) -> jnp.ndarray:
+    """Rank-match claimants to free slots, branch-free.
+
+    ``free_mask [..., T]``: slots available.  ``want_mask [..., D]``:
+    claimants.  Returns ``slot_for [..., D] int32``: the claimed slot per
+    claimant, or -1 if the pool is exhausted (claim dropped — the same
+    back-pressure a real tracker/server applies).
+
+    The k-th claimant (in index order) takes the k-th free slot: a
+    rank-matching computed with cumsums and one scatter; O(T + D) work per
+    stream, no sorting, no data-dependent shapes.
+    """
+    t = free_mask.shape[-1]
+    d = want_mask.shape[-1]
+    batch = jnp.broadcast_shapes(free_mask.shape[:-1], want_mask.shape[:-1])
+    free_mask = jnp.broadcast_to(free_mask, batch + (t,))
+    want_mask = jnp.broadcast_to(want_mask, batch + (d,))
+
+    free_rank = jnp.cumsum(free_mask, axis=-1) - 1          # rank of each free slot
+    want_rank = jnp.cumsum(want_mask, axis=-1) - 1          # rank of each claimant
+    num_free = free_mask.sum(axis=-1, keepdims=True)
+
+    # slot_of_rank[r] = index of the r-th free slot (overflow row t -> dropped)
+    slot_of_rank = jnp.full(batch + (t + 1,), -1, jnp.int32)
+    scatter_to = jnp.where(free_mask, free_rank, t)
+    slot_idx = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), batch + (t,))
+    flat = slot_of_rank.reshape((-1, t + 1))
+    rows = jnp.arange(flat.shape[0])[:, None]
+    flat = flat.at[rows, scatter_to.reshape((-1, t))].set(slot_idx.reshape((-1, t)))
+    slot_of_rank = flat.reshape(batch + (t + 1,))
+
+    ok = want_mask & (want_rank < num_free)
+    lookup = jnp.where(ok, want_rank, t).astype(jnp.int32)
+    slot_for = jnp.take_along_axis(slot_of_rank, lookup, axis=-1)
+    return jnp.where(ok, slot_for, -1).astype(jnp.int32)
+
+
+def birth(pool: SlotPool, slot_for: jnp.ndarray) -> SlotPool:
+    """Activate claimed slots (``slot_for`` from :func:`assign_slots`)."""
+    t = pool.capacity
+    batch = pool.alive.shape[:-1]
+    claimed = slot_for >= 0                                  # [..., D]
+    target = jnp.where(claimed, slot_for, t)                 # overflow -> t
+
+    def scat(field, value):
+        ext = jnp.concatenate([field, field[..., :1]], axis=-1)  # overflow col
+        flat = ext.reshape((-1, t + 1))
+        rows = jnp.arange(flat.shape[0])[:, None]
+        v = jnp.broadcast_to(value, target.shape).reshape((-1, target.shape[-1]))
+        flat = flat.at[rows, target.reshape((-1, target.shape[-1]))].set(v)
+        return flat.reshape(batch + (t + 1,))[..., :t]
+
+    # uid: k-th claimant gets next_uid + k
+    order = jnp.cumsum(claimed, axis=-1) - 1
+    uids = pool.next_uid[..., None] + jnp.where(claimed, order, 0)
+    n_born = claimed.sum(axis=-1)
+    return SlotPool(
+        alive=scat(pool.alive, True),
+        age=scat(pool.age, 0),
+        hits=scat(pool.hits, 0),
+        hit_streak=scat(pool.hit_streak, 0),
+        time_since_update=scat(pool.time_since_update, 0),
+        uid=scat(pool.uid, uids.astype(jnp.int32)),
+        next_uid=pool.next_uid + n_born.astype(jnp.int32),
+    )
+
+
+def tick(pool: SlotPool, matched: jnp.ndarray, max_age: int) -> SlotPool:
+    """Advance one step: matched slots refresh, unmatched age out.
+
+    ``matched [..., T]``: alive slots updated this step.  Slots whose
+    ``time_since_update`` exceeds ``max_age`` die.
+    """
+    alive = pool.alive
+    hit = alive & matched
+    miss = alive & ~matched
+    tsu = jnp.where(hit, 0, pool.time_since_update + miss.astype(jnp.int32))
+    new_alive = alive & (tsu <= max_age)
+    return pool._replace(
+        alive=new_alive,
+        age=jnp.where(alive, pool.age + 1, pool.age),
+        hits=pool.hits + hit.astype(jnp.int32),
+        hit_streak=jnp.where(hit, pool.hit_streak + 1,
+                             jnp.where(miss, 0, pool.hit_streak)),
+        time_since_update=tsu,
+        uid=jnp.where(new_alive, pool.uid, -1),
+    )

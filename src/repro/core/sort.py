@@ -1,0 +1,167 @@
+"""SORT — Simple Online and Real-time Tracking, batched over streams.
+
+Implements paper Algorithm 1 / Fig. 2's ``Update`` function as a single
+jit-compiled, static-shape step over a *batch* of independent video streams:
+the TPU realization of the paper's throughput-scaling result (one OpenMP
+worker per stream -> one vector lane per stream; see DESIGN.md §2).
+
+Per frame (paper Fig. 2):
+  1. Kalman-predict every live tracker          (§ "Predict",   AI 2.4)
+  2. IoU cost + Hungarian assignment + gating   (§ "Assign",    AI 1.5)
+  3. Kalman-update matched trackers             (§ "Update",    AI 18)
+  4. age/kill unmatched trackers, birth new trackers from unmatched
+     detections                                 (§ "Create new")
+  5. emit confirmed tracks                      (§ "Prepare output")
+
+Lifecycle constants follow Bewley's reference implementation
+(max_age=1, min_hits=3, iou_threshold=0.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import association, bbox, kalman, slots
+
+
+@dataclasses.dataclass(frozen=True)
+class SortConfig:
+    max_trackers: int = 16     # slot capacity T (>= max objects/frame; Table I max is 13)
+    max_detections: int = 16   # padded detections per frame D
+    iou_threshold: float = 0.3
+    max_age: int = 1
+    min_hits: int = 3
+    dtype: str = "float32"
+    # kernel injection (None -> pure-jnp reference path). Set by repro.kernels.ops.
+    use_kernels: bool = False
+
+
+class SortState(NamedTuple):
+    x: jnp.ndarray        # [S, T, 7]  Kalman means
+    p: jnp.ndarray        # [S, T, 7, 7] covariances
+    pool: slots.SlotPool  # [S, T] lifecycle
+    frame_count: jnp.ndarray  # [S] int32
+
+
+class SortOutput(NamedTuple):
+    boxes: jnp.ndarray    # [S, T, 4] xyxy of every slot (post update/birth)
+    uid: jnp.ndarray      # [S, T] track id, -1 if dead
+    emit: jnp.ndarray     # [S, T] bool — confirmed tracks to report this frame
+    matched_det: jnp.ndarray  # [S, D] bool (for metrics)
+
+
+class SortEngine:
+    """Batched SORT over ``S`` independent streams.
+
+    ``predict_fn(x, p) -> (x, p)`` / ``update_fn(x, p, z, mask) -> (x, p)`` /
+    ``iou_fn(a, b) -> iou`` are injection points for Pallas kernels
+    (``repro.kernels.ops``); defaults are the pure-jnp reference path so the
+    engine runs identically on CPU.
+    """
+
+    def __init__(self, config: SortConfig,
+                 predict_fn: Optional[Callable] = None,
+                 update_fn: Optional[Callable] = None,
+                 iou_fn: Optional[Callable] = None,
+                 assoc_fn: Optional[Callable] = None):
+        self.config = config
+        self.params = kalman.KalmanParams.default(jnp.dtype(config.dtype))
+        self._predict = predict_fn or (lambda x, p: kalman.predict(x, p, self.params))
+        self._update = update_fn or (
+            lambda x, p, z, m: kalman.masked_update(x, p, z, m, self.params))
+        self._iou = iou_fn or bbox.iou_matrix
+        self._assoc = assoc_fn or association.associate
+
+    # ------------------------------------------------------------------ state
+    def init(self, num_streams: int) -> SortState:
+        cfg = self.config
+        dt = jnp.dtype(cfg.dtype)
+        return SortState(
+            x=jnp.zeros((num_streams, cfg.max_trackers, kalman.DIM_X), dt),
+            p=jnp.broadcast_to(kalman.initial_covariance(dt),
+                               (num_streams, cfg.max_trackers,
+                                kalman.DIM_X, kalman.DIM_X)).copy(),
+            pool=slots.init_pool((num_streams,), cfg.max_trackers),
+            frame_count=jnp.zeros((num_streams,), jnp.int32),
+        )
+
+    # ------------------------------------------------------------------- step
+    def step(self, state: SortState, det_boxes: jnp.ndarray,
+             det_mask: jnp.ndarray) -> tuple[SortState, SortOutput]:
+        """One frame for every stream.
+
+        ``det_boxes [S, D, 4]`` xyxy, ``det_mask [S, D]``.
+        """
+        cfg = self.config
+        x, p, pool = state.x, state.p, state.pool
+
+        # 1. predict (all slots; dead slots are ignored downstream)
+        x, p = self._predict(x, p)
+        trk_boxes = bbox.z_to_xyxy(x[..., :4])
+
+        # 2. associate (Hungarian by default; injectable, e.g. greedy)
+        assoc = self._assoc(det_boxes, det_mask, trk_boxes,
+                            pool.alive, cfg.iou_threshold,
+                            iou_fn=self._iou)
+
+        # 3. update matched trackers with their detection's observation
+        safe_det = jnp.where(assoc.trk_to_det >= 0, assoc.trk_to_det, 0)
+        z_all = bbox.xyxy_to_z(det_boxes)                     # [S, D, 4]
+        z_trk = jnp.take_along_axis(z_all, safe_det[..., None], axis=-2)
+        x, p = self._update(x, p, z_trk.astype(x.dtype), assoc.matched_trk)
+
+        # 4a. age & kill
+        pool = slots.tick(pool, assoc.matched_trk, cfg.max_age)
+
+        # 4b. births from unmatched detections into free slots
+        slot_for = slots.assign_slots(~pool.alive, assoc.unmatched_det)
+        pool = slots.birth(pool, slot_for)
+        z_det = z_all.astype(x.dtype)
+        x, p = _scatter_births(x, p, z_det, slot_for, jnp.dtype(cfg.dtype))
+
+        # 5. emit: updated this frame AND (probation passed OR warmup window)
+        frame_count = state.frame_count + 1
+        warmup = (frame_count <= cfg.min_hits)[..., None]
+        emit = (pool.alive
+                & (pool.time_since_update < 1)
+                & ((pool.hit_streak >= cfg.min_hits) | warmup))
+
+        out = SortOutput(boxes=bbox.z_to_xyxy(x[..., :4]),
+                         uid=pool.uid, emit=emit,
+                         matched_det=assoc.matched_det)
+        return SortState(x, p, pool, frame_count), out
+
+    # -------------------------------------------------------------------- run
+    def run(self, state: SortState, frames: jnp.ndarray,
+            frame_masks: jnp.ndarray) -> tuple[SortState, SortOutput]:
+        """Scan over the frame axis.
+
+        ``frames [F, S, D, 4]``, ``frame_masks [F, S, D]`` ->
+        outputs stacked over ``F``.
+        """
+        def body(st, inp):
+            boxes, mask = inp
+            st, out = self.step(st, boxes, mask)
+            return st, out
+
+        return jax.lax.scan(body, state, (frames, frame_masks))
+
+
+def _scatter_births(x, p, z_det, slot_for, dtype):
+    """Write ``init_state(z)`` of each claimed detection into its slot."""
+    s, t = x.shape[0], x.shape[1]
+    d = slot_for.shape[-1]
+    x0, p0 = kalman.init_state(z_det, dtype)                 # [S, D, 7], [S, D, 7, 7]
+    claimed = slot_for >= 0
+    # Claimed targets are distinct (assign_slots is a rank matching); all
+    # unclaimed detections write the overflow slot ``t`` which is sliced off.
+    target = jnp.where(claimed, slot_for, t)
+    xe = jnp.concatenate([x, x[:, :1]], axis=1)              # [S, T+1, 7]
+    pe = jnp.concatenate([p, p[:, :1]], axis=1)
+    rows = jnp.arange(s)[:, None]
+    xe = xe.at[rows, target].set(x0)
+    pe = pe.at[rows, target].set(p0)
+    return xe[:, :t], pe[:, :t]

@@ -1,0 +1,1 @@
+from . import mot, stream, synthetic  # noqa: F401

@@ -1,0 +1,91 @@
+"""MOT15 challenge text-format IO (paper Table I datasets).
+
+Detection files are CSV lines::
+
+    frame, id, bb_left, bb_top, bb_width, bb_height, conf, x, y, z
+
+with ``id = -1`` for raw detections.  ``read_det_file`` parses into the
+padded dense arrays the batched engine consumes; ``write_results`` emits the
+MOT15 submission format the original SORT writes, so outputs are directly
+comparable.
+"""
+from __future__ import annotations
+
+import io
+import os
+
+import numpy as np
+
+# Paper Table I: the 11 MOT15 train sequences and their sizes, used by the
+# synthetic workload generator to mimic real stream statistics.
+TABLE_I = {
+    "PETS09-S2L1": (795, 8),
+    "TUD-Campus": (71, 6),
+    "TUD-Stadtmitte": (179, 7),
+    "ETH-Bahnhof": (1000, 9),
+    "ETH-Sunnyday": (354, 8),
+    "ETH-Pedcross2": (837, 9),
+    "KITTI-13": (340, 5),
+    "KITTI-17": (145, 7),
+    "ADL-Rundle-6": (525, 11),
+    "ADL-Rundle-8": (654, 11),
+    "Venice-2": (600, 13),
+}
+
+
+def read_det_file(path_or_buf, min_conf: float = 0.0,
+                  max_dets: int | None = None):
+    """Parse a MOT15 ``det.txt``.
+
+    Returns ``det_boxes [F, D, 4] float32`` (xyxy), ``det_mask [F, D] bool``.
+    """
+    if isinstance(path_or_buf, (str, os.PathLike)):
+        with open(path_or_buf) as fh:
+            raw = fh.read()
+    else:
+        raw = path_or_buf.read()
+    rows = np.loadtxt(io.StringIO(raw), delimiter=",", ndmin=2)
+    if rows.size == 0:
+        return np.zeros((0, 1, 4), np.float32), np.zeros((0, 1), bool)
+    frames = rows[:, 0].astype(int)
+    conf_ok = rows[:, 6] >= min_conf
+    rows, frames = rows[conf_ok], frames[conf_ok]
+    f_max = int(frames.max())
+    counts = np.bincount(frames - 1, minlength=f_max)
+    d = int(counts.max()) if max_dets is None else max_dets
+    det_boxes = np.zeros((f_max, d, 4), np.float32)
+    det_mask = np.zeros((f_max, d), bool)
+    cursor = np.zeros(f_max, int)
+    for r in rows:
+        t = int(r[0]) - 1
+        i = cursor[t]
+        if i >= d:
+            continue
+        x, y, w, h = r[2], r[3], r[4], r[5]
+        det_boxes[t, i] = [x, y, x + w, y + h]
+        det_mask[t, i] = True
+        cursor[t] += 1
+    return det_boxes, det_mask
+
+
+def write_results(path, boxes, uids, emit):
+    """Write tracking output in MOT15 submission format.
+
+    ``boxes [F, T, 4]`` xyxy, ``uids [F, T]``, ``emit [F, T]`` bool.
+    """
+    with open(path, "w") as fh:
+        for t in range(boxes.shape[0]):
+            for k in np.where(emit[t])[0]:
+                x1, y1, x2, y2 = boxes[t, k]
+                fh.write(f"{t + 1},{int(uids[t, k])},{x1:.2f},{y1:.2f},"
+                         f"{x2 - x1:.2f},{y2 - y1:.2f},1,-1,-1,-1\n")
+
+
+def write_det_file(path, det_boxes, det_mask):
+    """Inverse of :func:`read_det_file` (used to round-trip synthetic data)."""
+    with open(path, "w") as fh:
+        for t in range(det_boxes.shape[0]):
+            for k in np.where(det_mask[t])[0]:
+                x1, y1, x2, y2 = det_boxes[t, k]
+                fh.write(f"{t + 1},-1,{x1:.2f},{y1:.2f},"
+                         f"{x2 - x1:.2f},{y2 - y1:.2f},1,-1,-1,-1\n")

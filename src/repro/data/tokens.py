@@ -1,0 +1,61 @@
+"""Synthetic LM token pipeline (training substrate for the arch zoo).
+
+Generates Zipf-distributed token streams with locally coherent n-gram
+structure (so the loss actually decreases during the example training runs),
+packs them into fixed-length sequences, and shards the host batch onto the
+mesh.  Modality variants produce the audio-frame / vision-patch stand-ins
+the ``[audio]``/``[vlm]`` archs consume.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class TokenStream:
+    """Deterministic synthetic corpus with a repeating-bigram backbone."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, zipf_a: float = 1.2):
+        self.vocab = vocab_size
+        self.rng = np.random.default_rng(seed)
+        self.zipf_a = zipf_a
+        # fixed random bigram table gives the model something learnable
+        self._next = self.rng.integers(0, vocab_size,
+                                       size=(vocab_size,), dtype=np.int32)
+
+    def sample(self, batch: int, seq_len: int):
+        start = (self.rng.zipf(self.zipf_a, size=(batch,)) - 1) % self.vocab
+        toks = np.empty((batch, seq_len + 1), np.int32)
+        toks[:, 0] = start
+        noise = self.rng.random((batch, seq_len)) < 0.1
+        rand = self.rng.integers(0, self.vocab, size=(batch, seq_len))
+        for t in range(seq_len):
+            nxt = self._next[toks[:, t]]
+            toks[:, t + 1] = np.where(noise[:, t], rand[:, t], nxt)
+        return toks
+
+    def batch(self, batch: int, seq_len: int) -> dict:
+        toks = self.sample(batch, seq_len)
+        return {"tokens": toks[:, :-1],
+                "labels": toks[:, 1:].astype(np.int32)}
+
+
+def audio_batch(rng, batch, seq_len, d_model, vocab, mask_rate=0.08,
+                span=10):
+    """HuBERT-style masked-prediction batch: frame feats + span masks."""
+    feats = rng.normal(0, 1, size=(batch, seq_len, d_model)).astype(np.float32)
+    labels = rng.integers(0, vocab, size=(batch, seq_len), dtype=np.int32)
+    starts = rng.random((batch, seq_len)) < mask_rate / span
+    mask = np.zeros((batch, seq_len), bool)
+    for s in range(span):
+        mask[:, s:] |= starts[:, :seq_len - s]
+    return {"feats": feats, "labels": labels, "mask_spans": mask,
+            "loss_mask": mask.astype(np.float32)}
+
+
+def vision_batch(rng, batch, text_len, num_patches, frontend_dim, vocab,
+                 stream: TokenStream):
+    """LLaVA-style batch: CLIP patch features + text tokens."""
+    b = stream.batch(batch, text_len)
+    patches = rng.normal(0, 1, size=(batch, num_patches,
+                                     frontend_dim)).astype(np.float32)
+    return {"tokens": b["tokens"], "labels": b["labels"], "patches": patches}

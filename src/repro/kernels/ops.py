@@ -1,0 +1,135 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Converts between the engine's natural layout (``x [S, T, 7]``,
+``p [S, T, 7, 7]``) and the kernels' lane layout (batch on lanes), pads the
+flattened tracker batch to the lane-block size, and dispatches:
+
+* TPU backend  -> compiled Pallas kernel,
+* anything else -> the same kernel in ``interpret=True`` (bit-identical
+  semantics, Python-evaluated) or the pure-jnp oracle for speed.
+
+``engine_fns()`` returns drop-in ``predict_fn`` / ``update_fn`` / ``iou_fn``
+for :class:`repro.core.sort.SortEngine`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import iou_cost as _iou_kernel
+from . import kalman_fused as _kalman
+from . import ref
+
+__all__ = ["predict", "update", "iou", "engine_fns", "to_lane", "from_lane"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_b(b: int, block_b: int) -> int:
+    return -(-b // block_b) * block_b
+
+
+# ---------------------------------------------------------------- layouts
+def to_lane(x: jnp.ndarray, p: jnp.ndarray, block_b: int):
+    """``x [S,T,7], p [S,T,7,7]`` -> lane layout ``[7,B], [49,B]`` (padded)."""
+    s, t = x.shape[0], x.shape[1]
+    b = s * t
+    bp = _pad_b(b, block_b)
+    xl = x.reshape(b, 7).T
+    pl_ = p.reshape(b, 49).T
+    if bp != b:
+        xl = jnp.pad(xl, ((0, 0), (0, bp - b)))
+        pl_ = jnp.pad(pl_, ((0, 0), (0, bp - b)),
+                      constant_values=1.0)  # keep padded S invertible
+    return xl, pl_
+
+
+def from_lane(xl: jnp.ndarray, pl_: jnp.ndarray, s: int, t: int):
+    b = s * t
+    return (xl[:, :b].T.reshape(s, t, 7),
+            pl_[:, :b].T.reshape(s, t, 7, 7))
+
+
+# ------------------------------------------------------------------- ops
+def predict(x, p, *, block_b: int = _kalman.DEFAULT_BLOCK_B,
+            interpret: bool | None = None):
+    """Engine-layout predict via the fused kernel."""
+    s, t = x.shape[0], x.shape[1]
+    xl, pl_ = to_lane(x, p, block_b)
+    xl, pl_ = _kalman.predict(xl, pl_, block_b=block_b,
+                              interpret=_resolve(interpret))
+    return from_lane(xl, pl_, s, t)
+
+
+def update(x, p, z, mask, *, block_b: int = _kalman.DEFAULT_BLOCK_B,
+           interpret: bool | None = None):
+    """Engine-layout masked update via the fused kernel.
+
+    ``z [S, T, 4]``, ``mask [S, T]`` bool.
+    """
+    s, t = x.shape[0], x.shape[1]
+    b = s * t
+    bp = _pad_b(b, block_b)
+    xl, pl_ = to_lane(x, p, block_b)
+    zl = jnp.pad(z.reshape(b, 4).T, ((0, 0), (0, bp - b)))
+    ml = jnp.pad(mask.reshape(1, b).astype(x.dtype), ((0, 0), (0, bp - b)))
+    xl, pl_ = _kalman.update(xl, pl_, zl, ml, block_b=block_b,
+                             interpret=_resolve(interpret))
+    return from_lane(xl, pl_, s, t)
+
+
+def iou(det_boxes, trk_boxes, *, block_b: int = _iou_kernel.DEFAULT_BLOCK_B,
+        interpret: bool | None = None):
+    """``det [S, D, 4]``, ``trk [S, T, 4]`` -> IoU ``[S, D, T]``."""
+    s, d = det_boxes.shape[0], det_boxes.shape[1]
+    t = trk_boxes.shape[1]
+    bp = _pad_b(s, block_b)
+    dl = jnp.pad(det_boxes.transpose(1, 2, 0), ((0, 0), (0, 0), (0, bp - s)))
+    tl = jnp.pad(trk_boxes.transpose(1, 2, 0), ((0, 0), (0, 0), (0, bp - s)))
+    out = _iou_kernel.iou_cost(dl, tl, block_b=block_b,
+                               interpret=_resolve(interpret))
+    return out[:, :, :s].transpose(2, 0, 1)
+
+
+def _resolve(interpret: bool | None) -> bool:
+    return (not _on_tpu()) if interpret is None else interpret
+
+
+# ------------------------------------------------------------ engine glue
+def engine_fns(block_b: int | None = None, use_ref: bool = False):
+    """Kernel-backed ``(predict_fn, update_fn, iou_fn)`` for SortEngine.
+
+    ``use_ref=True`` bypasses pallas_call and uses the lane-layout oracle —
+    the fast path on CPU (interpret mode pays a Python-per-grid-step tax)
+    with identical numerics.
+    """
+    kb = block_b or _kalman.DEFAULT_BLOCK_B
+    ib = block_b or _iou_kernel.DEFAULT_BLOCK_B
+
+    if use_ref:
+        def predict_fn(x, p):
+            s, t = x.shape[0], x.shape[1]
+            xl, pl_ = to_lane(x, p, kb)
+            return from_lane(*ref.predict_lane(xl, pl_), s, t)
+
+        def update_fn(x, p, z, m):
+            s, t = x.shape[0], x.shape[1]
+            b, bp = s * t, _pad_b(s * t, kb)
+            xl, pl_ = to_lane(x, p, kb)
+            zl = jnp.pad(z.reshape(b, 4).T, ((0, 0), (0, bp - b)))
+            ml = jnp.pad(m.reshape(1, b).astype(x.dtype), ((0, 0), (0, bp - b)))
+            return from_lane(*ref.update_lane(xl, pl_, zl, ml), s, t)
+
+        def iou_fn(a, b_):
+            s = a.shape[0]
+            return ref.iou_lane(a.transpose(1, 2, 0),
+                                b_.transpose(1, 2, 0)).transpose(2, 0, 1)
+        return predict_fn, update_fn, iou_fn
+
+    return (functools.partial(predict, block_b=kb),
+            functools.partial(update, block_b=kb),
+            functools.partial(iou, block_b=ib))

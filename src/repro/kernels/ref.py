@@ -1,0 +1,134 @@
+"""Pure-jnp oracles for the Pallas kernels, in the kernels' *lane layout*.
+
+Layout convention (DESIGN.md §2): the tracker batch axis ``B`` lives on the
+TPU lane dimension.  State is ``x [7, B]``, covariance ``p [49, B]`` (row-
+major flattened 7x7), observation ``z [4, B]``, mask ``m [1, B]`` (f32 0/1).
+
+These oracles are the ground truth for ``tests/test_kernels.py`` and the
+CPU fallback for ``ops.py``.  They are algebraically identical to
+``repro.core.kalman`` (which is itself validated against the numpy
+reference), just transposed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# SORT filter constants in lane form -------------------------------------
+Q_DIAG = (1.0, 1.0, 1.0, 1.0, 0.01, 0.01, 1e-4)
+R_DIAG = (1.0, 1.0, 10.0, 10.0)
+
+
+def _idx(i: int, j: int) -> int:
+    return i * 7 + j
+
+
+def predict_lane(x: jnp.ndarray, p: jnp.ndarray):
+    """Constant-velocity predict on lane layout. ``x [7,B]``, ``p [49,B]``."""
+    ds = jnp.where(x[2] + x[6] <= 0.0, 0.0, x[6])
+    x_new = jnp.stack([x[0] + x[4], x[1] + x[5], x[2] + ds, x[3],
+                       x[4], x[5], ds], axis=0)
+
+    def fp(i, j):  # (F P F^T)[i, j] exploiting F = I + shift(0..2 -> 4..6)
+        v = p[_idx(i, j)]
+        if i < 3:
+            v = v + p[_idx(i + 4, j)]
+        if j < 3:
+            v = v + p[_idx(i, j + 4)]
+        if i < 3 and j < 3:
+            v = v + p[_idx(i + 4, j + 4)]
+        return v
+
+    rows = [fp(i, j) + (Q_DIAG[i] if i == j else 0.0)
+            for i in range(7) for j in range(7)]
+    return x_new, jnp.stack(rows, axis=0)
+
+
+def _inv2(m00, m01, m10, m11):
+    det = m00 * m11 - m01 * m10
+    inv = 1.0 / det
+    return m11 * inv, -m01 * inv, -m10 * inv, m00 * inv
+
+
+def update_lane(x: jnp.ndarray, p: jnp.ndarray, z: jnp.ndarray,
+                mask: jnp.ndarray):
+    """Masked measurement update on lane layout.
+
+    ``x [7,B]``, ``p [49,B]``, ``z [4,B]``, ``mask [1,B]`` (0/1 f32).
+    """
+    y = [z[i] - x[i] for i in range(4)]
+    # S = P[0:4, 0:4] + diag(R)
+    s = [[p[_idx(i, j)] + (R_DIAG[i] if i == j else 0.0)
+          for j in range(4)] for i in range(4)]
+    sinv = _inv4(s)
+    # K = P[:, 0:4] @ Sinv  -> [7][4] of (B,) vectors
+    k = [[sum(p[_idx(i, kk)] * sinv[kk][j] for kk in range(4))
+          for j in range(4)] for i in range(7)]
+    x_new = jnp.stack(
+        [x[i] + sum(k[i][j] * y[j] for j in range(4)) for i in range(7)], 0)
+    # P_new = (I - K H) P ;  (K H)[i, j] = K[i, j] for j < 4 else 0
+    p_new = jnp.stack(
+        [p[_idx(i, j)] - sum(k[i][kk] * p[_idx(kk, j)] for kk in range(4))
+         for i in range(7) for j in range(7)], 0)
+    m = mask[0]
+    return (m * x_new + (1.0 - m) * x), (m * p_new + (1.0 - m) * p)
+
+
+def _inv4(s):
+    """Blockwise inverse of SPD 4x4 given as [[ (B,) x4 ] x4]."""
+    a00, a01, a10, a11 = s[0][0], s[0][1], s[1][0], s[1][1]
+    b00, b01, b10, b11 = s[0][2], s[0][3], s[1][2], s[1][3]
+    c00, c01, c10, c11 = s[2][0], s[2][1], s[3][0], s[3][1]
+    d00, d01, d10, d11 = s[2][2], s[2][3], s[3][2], s[3][3]
+    ai00, ai01, ai10, ai11 = _inv2(a00, a01, a10, a11)
+    # C A^-1 (2x2)
+    ca00 = c00 * ai00 + c01 * ai10
+    ca01 = c00 * ai01 + c01 * ai11
+    ca10 = c10 * ai00 + c11 * ai10
+    ca11 = c10 * ai01 + c11 * ai11
+    # A^-1 B (2x2)
+    ab00 = ai00 * b00 + ai01 * b10
+    ab01 = ai00 * b01 + ai01 * b11
+    ab10 = ai10 * b00 + ai11 * b10
+    ab11 = ai10 * b01 + ai11 * b11
+    # Schur = D - C A^-1 B
+    s00 = d00 - (ca00 * b00 + ca01 * b10)
+    s01 = d01 - (ca00 * b01 + ca01 * b11)
+    s10 = d10 - (ca10 * b00 + ca11 * b10)
+    s11 = d11 - (ca10 * b01 + ca11 * b11)
+    si00, si01, si10, si11 = _inv2(s00, s01, s10, s11)
+    # TL = Ai + AB @ Si @ CA ; TR = -AB @ Si ; BL = -Si @ CA ; BR = Si
+    absi00 = ab00 * si00 + ab01 * si10
+    absi01 = ab00 * si01 + ab01 * si11
+    absi10 = ab10 * si00 + ab11 * si10
+    absi11 = ab10 * si01 + ab11 * si11
+    tl00 = ai00 + absi00 * ca00 + absi01 * ca10
+    tl01 = ai01 + absi00 * ca01 + absi01 * ca11
+    tl10 = ai10 + absi10 * ca00 + absi11 * ca10
+    tl11 = ai11 + absi10 * ca01 + absi11 * ca11
+    tr00, tr01 = -absi00, -absi01
+    tr10, tr11 = -absi10, -absi11
+    bl00 = -(si00 * ca00 + si01 * ca10)
+    bl01 = -(si00 * ca01 + si01 * ca11)
+    bl10 = -(si10 * ca00 + si11 * ca10)
+    bl11 = -(si10 * ca01 + si11 * ca11)
+    return [[tl00, tl01, tr00, tr01],
+            [tl10, tl11, tr10, tr11],
+            [bl00, bl01, si00, si01],
+            [bl10, bl11, si10, si11]]
+
+
+def iou_lane(det: jnp.ndarray, trk: jnp.ndarray) -> jnp.ndarray:
+    """IoU on lane layout: ``det [D, 4, B]``, ``trk [T, 4, B]`` -> ``[D, T, B]``."""
+    d, t = det.shape[0], trk.shape[0]
+    rows = []
+    for i in range(d):
+        for j in range(t):
+            ax1, ay1, ax2, ay2 = det[i, 0], det[i, 1], det[i, 2], det[i, 3]
+            bx1, by1, bx2, by2 = trk[j, 0], trk[j, 1], trk[j, 2], trk[j, 3]
+            iw = jnp.maximum(jnp.minimum(ax2, bx2) - jnp.maximum(ax1, bx1), 0.0)
+            ih = jnp.maximum(jnp.minimum(ay2, by2) - jnp.maximum(ay1, by1), 0.0)
+            inter = iw * ih
+            ua = jnp.maximum(ax2 - ax1, 0.0) * jnp.maximum(ay2 - ay1, 0.0)
+            ub = jnp.maximum(bx2 - bx1, 0.0) * jnp.maximum(by2 - by1, 0.0)
+            rows.append(inter / jnp.maximum(ua + ub - inter, 1e-9))
+    return jnp.stack(rows, 0).reshape(d, t, -1)

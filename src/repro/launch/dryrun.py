@@ -1,0 +1,327 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+the full train/prefill/decode step is jit-lowered with production
+shardings against ShapeDtypeStruct inputs (no allocation), compiled for the
+512-way (multi-pod) / 256-way (single-pod) SPMD mesh, and the compiled
+artifact's memory/cost/collective statistics are recorded for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both \
+        [--arch qwen2-7b] [--shape train_4k] --out results/dryrun.json
+"""
+# The first two statements MUST precede any jax import: jax locks the device
+# count at first initialization.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import numpy as np   # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.launch.mesh import dp_axes as mesh_dp, make_production_mesh  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.models.transformer import Parallel, plan_segments  # noqa: E402
+from repro.sharding.rules import params_pspecs  # noqa: E402
+from repro.sharding.specs import batch_spec, cache_spec  # noqa: E402
+from repro.train.optimizer import AdamWConfig  # noqa: E402
+from repro.train.train_step import TrainState, make_train_step  # noqa: E402
+from repro.train.optimizer import adamw  # noqa: E402
+
+# ---------------------------------------------------------------- helpers
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_ARR_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16"
+                     r"|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _arr_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _ARR_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-buffer bytes of every collective op in optimized HLO."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start|-done)?\(", ls)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # counted at -start
+        kind = m.group(2)
+        out[kind]["bytes"] += _arr_bytes(m.group(1))
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def abstract_params(model):
+    """(param ShapeDtypeStructs, logical specs) without allocation."""
+    cap = {}
+
+    def init_only(key):
+        p, s = model.init(key)
+        cap["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(init_only, jax.random.PRNGKey(0))
+    return shapes, cap["specs"]
+
+
+def _sds(tree, shardings):
+    """Attach shardings to a ShapeDtypeStruct tree (for .lower)."""
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings)
+
+
+def _named(tree_pspecs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def serve_cache_pspecs(cfg, caches_sds, mesh):
+    segs = plan_segments(cfg)
+
+    def leaf_spec(shape):
+        sp = cache_spec(shape, mesh)
+        if cfg.attn_type == "mla" and len(shape) == 3:
+            # §Perf C2: the MLA latent dims (kv_lora, rope) are CONTRACTED
+            # against every decode step's query — model-sharding them makes
+            # XLA all-gather the whole compressed cache per layer (observed:
+            # 536 MB/layer).  Shard (batch over dp) x (SEQ over model):
+            # attention contracts r locally per seq shard and the softmax /
+            # context psums are tiny [b, h]-vectors, while the cache stays
+            # 256-way sharded.
+            dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            bdim = sp[0] if shape[0] % max(
+                1, int(np.prod([mesh.shape[a] for a in dp]))) == 0 else None
+            sdim = "model" if shape[1] % mesh.shape.get("model", 1) == 0 \
+                else None
+            sp = P(bdim, sdim, None)
+        return sp
+
+    out = []
+    for seg, tree in zip(segs, caches_sds["segments"]):
+        if seg.num_layers > 1:
+            out.append(jax.tree.map(
+                lambda x: P(None, *tuple(leaf_spec(x.shape[1:]))), tree))
+        else:
+            out.append(jax.tree.map(lambda x: leaf_spec(x.shape), tree))
+    return {"segments": out}
+
+
+def logits_spec(shape, mesh):
+    dims = list(batch_spec(shape, mesh))
+    if shape[-1] % mesh.shape.get("model", 1) == 0 and "model" in mesh.shape:
+        dims[-1] = "model"
+    return P(*dims)
+
+
+# ------------------------------------------------------------ cell builder
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (fn, example_args, in_shardings, out_shardings, donate)."""
+    cfg = registry.get_arch(arch)
+    shape = registry.SHAPES[shape_name]
+    par = Parallel(mesh=mesh, dp_axes=mesh_dp(mesh), tp_axis="model")
+    model = build_model(cfg)
+    p_sds, p_logical = abstract_params(model)
+    p_pspecs = params_pspecs(p_logical, p_sds, mesh)
+    p_shard = _named(p_pspecs, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        step = make_train_step(model, par, opt_cfg)
+        opt_init, _ = adamw(opt_cfg)
+        state_sds = jax.eval_shape(
+            lambda p: TrainState(p, opt_init(p), jnp.zeros((), jnp.int32)),
+            p_sds)
+        f32_shard = jax.tree.map(lambda s: s, p_shard)  # moments mirror params
+        state_shard = TrainState(
+            params=p_shard,
+            opt_state=type(state_sds.opt_state)(
+                m=f32_shard, v=f32_shard,
+                count=NamedSharding(mesh, P())),
+            step=NamedSharding(mesh, P()))
+        batch_sds = registry.input_specs(arch, shape_name)["batch"]
+        batch_shard = jax.tree.map(
+            lambda x: NamedSharding(mesh, batch_spec(x.shape, mesh)),
+            batch_sds)
+        metrics_shard = {"loss": NamedSharding(mesh, P()),
+                         "grad_norm": NamedSharding(mesh, P()),
+                         "lr": NamedSharding(mesh, P())}
+        args = (_sds(state_sds, state_shard), _sds(batch_sds, batch_shard))
+        return (step, args, (state_shard, batch_shard),
+                (state_shard, metrics_shard), (0,))
+
+    if shape.kind == "prefill":
+        b, l = shape.global_batch, shape.seq_len
+        batch_sds = registry.input_specs(arch, shape_name)["batch"]
+        batch_shard = jax.tree.map(
+            lambda x: NamedSharding(mesh, batch_spec(x.shape, mesh)),
+            batch_sds)
+        if not cfg.causal:  # encoder: "prefill" = full encode, no cache
+            fn = lambda p, bt: model.forward(p, bt, par)
+            out_shard = NamedSharding(
+                mesh, logits_spec((b, l, cfg.padded_vocab), mesh))
+            args = (_sds(p_sds, p_shard), _sds(batch_sds, batch_shard))
+            return fn, args, (p_shard, batch_shard), out_shard, ()
+        fn = lambda p, bt: model.prefill(p, bt, par, l)
+        caches_sds = jax.eval_shape(
+            lambda: model.init_caches({"trunk": None}, b, l))
+        cache_shard = _named(serve_cache_pspecs(cfg, caches_sds, mesh), mesh)
+        lg_shard = NamedSharding(mesh,
+                                 logits_spec((b, 1, cfg.padded_vocab), mesh))
+        args = (_sds(p_sds, p_shard), _sds(batch_sds, batch_shard))
+        return (fn, args, (p_shard, batch_shard), (lg_shard, cache_shard),
+                ())
+
+    # decode: the full serve step (sample next token, update cache)
+    b, l = shape.global_batch, shape.seq_len
+    spec = registry.input_specs(arch, shape_name)
+    caches_sds = spec["caches"]
+    cache_shard = _named(serve_cache_pspecs(cfg, caches_sds, mesh), mesh)
+    tok_shard = NamedSharding(mesh, batch_spec((b, 1), mesh))
+    pos_shard = NamedSharding(mesh, batch_spec((b,), mesh))
+
+    def serve_step(p, token, pos, caches):
+        logits, caches = model.decode(p, token, pos, caches, par)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], pos + 1, caches
+
+    args = (_sds(p_sds, p_shard), _sds(spec["token"], tok_shard),
+            _sds(spec["pos"], pos_shard), _sds(caches_sds, cache_shard))
+    return (serve_step, args, (p_shard, tok_shard, pos_shard, cache_shard),
+            (tok_shard, pos_shard, cache_shard), (3,))
+
+
+# -------------------------------------------------------------------- run
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str) -> dict:
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = build_cell(arch, shape_name, mesh)
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)
+    cost = compiled.cost_analysis() or {}
+    print({k: v for k, v in cost.items()
+           if k in ("flops", "bytes accessed")})
+    hlo_text = compiled.as_text()
+    coll = collective_stats(hlo_text)
+    # loop-aware accounting: cost_analysis counts while bodies ONCE — a
+    # 60-layer scan would be ~60x undercounted (see hlo_analysis docstring)
+    from repro.launch.hlo_analysis import analyze_text
+    deep = analyze_text(hlo_text)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "devices": int(len(mesh.devices.flat)),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_raw_costan": float(cost.get("flops", -1.0)),
+        "bytes_raw_costan": float(cost.get("bytes accessed", -1.0)),
+        "flops": deep["flops"],
+        "hbm_bytes": deep["hbm_bytes"],
+        "collectives": deep["collectives"],
+        "collective_bytes": deep["collective_bytes"],
+        "collectives_unrolled_raw": coll,
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        rec[attr] = int(getattr(mem, attr, -1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        # always keep prior cells; --force only forces RE-RUNNING matches
+        with open(args.out) as fh:
+            results = json.load(fh)
+
+    meshes = []
+    if args.mesh in ("pod", "both"):
+        meshes.append(("pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multipod", "both"):
+        meshes.append(("multipod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    cells = [(a, s) for a, s, r in registry.cells()]
+    if args.arch:
+        aid = registry.ALIASES.get(args.arch, args.arch)
+        cells = [(a, s) for a, s in cells if a == aid]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+
+    n_fail = 0
+    for mesh_name, mesh in meshes:
+        for arch, shape_name in cells:
+            key = f"{arch}/{shape_name}/{mesh_name}"
+            if key in results and results[key].get("ok") and not args.force:
+                print(f"[skip] {key} (cached)")
+                continue
+            print(f"[cell] {key} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape_name, mesh, mesh_name)
+                rec["ok"] = True
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "ok": False, "error": f"{type(e).__name__}: {e}"}
+                n_fail += 1
+            results[key] = rec
+            with open(args.out, "w") as fh:
+                json.dump(results, fh, indent=1, sort_keys=True)
+            if rec["ok"]:
+                print(f"[ok]   {key}: compile={rec['compile_s']}s "
+                      f"flops={rec['flops']:.3g} "
+                      f"coll={rec['collective_bytes']:.3g}B")
+    print(f"done: {len(results)} cells recorded, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+"""Assigned-architecture zoo: unified pure-JAX transformer/SSM/hybrid stack."""
+from .config import ModelConfig  # noqa: F401

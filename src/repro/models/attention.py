@@ -1,0 +1,247 @@
+"""GQA attention: blockwise (flash-style) train/prefill + cached decode.
+
+Pure JAX, shard-agnostic: distribution comes entirely from the param specs
+(heads on the ``model`` mesh axis when divisible) and the activation batch
+sharding.  Long sequences never materialize the full score matrix — the
+forward is a double ``lax.scan`` over (q-chunk, kv-chunk) with an online
+softmax, and per-layer remat recomputes it in the backward pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import ParamBuilder, apply_rope, linear, rope_freqs
+
+NEG_INF = -1e30
+
+
+def gqa_init(pb: ParamBuilder, cfg: ModelConfig):
+    hd = cfg.head_dim_
+    sub = ParamBuilder(pb.key(), pb.dtype)
+    sub.dense("q", cfg.d_model, cfg.eff_n_heads * hd, "embed", "heads",
+              bias=cfg.qkv_bias)
+    sub.dense("k", cfg.d_model, cfg.eff_n_kv_heads * hd, "embed", "kv",
+              bias=cfg.qkv_bias)
+    sub.dense("v", cfg.d_model, cfg.eff_n_kv_heads * hd, "embed", "kv",
+              bias=cfg.qkv_bias)
+    sub.dense("o", cfg.eff_n_heads * hd, cfg.d_model, "heads", "embed")
+    p, s = sub.build()
+    if cfg.head_pad_factor > 1:
+        # zero the padded head block; zero o-proj ROWS make padded heads'
+        # contribution exactly zero, so outputs match the unpadded model.
+        import jax.numpy as jnp
+        real_q, real_kv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+        for nm, real in (("q", real_q), ("k", real_kv), ("v", real_kv)):
+            p[nm]["w"] = p[nm]["w"].at[:, real:].set(0.0)
+            if "b" in p[nm]:
+                p[nm]["b"] = p[nm]["b"].at[real:].set(0.0)
+        p["o"]["w"] = p["o"]["w"].at[real_q:, :].set(0.0)
+    pb.sub("attn", p, s)
+    return pb
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    b, l, _ = x.shape
+    hd = cfg.head_dim_
+    q = linear(x, p["q"]).reshape(b, l, cfg.eff_n_heads, hd)
+    k = linear(x, p["k"]).reshape(b, l, cfg.eff_n_kv_heads, hd)
+    v = linear(x, p["v"]).reshape(b, l, cfg.eff_n_kv_heads, hd)
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ModelConfig, positions, *, window=None,
+                q_chunk: int = 512, kv_chunk: int = 1024):
+    """Full-sequence attention (train / prefill).
+
+    ``x [B, L, D]``; ``positions [B, L]``; ``window`` overrides
+    ``cfg.sliding_window`` for this layer (None = full).
+    """
+    b, l, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = blockwise_attention(
+        q, k, v, positions,
+        causal=cfg.causal, window=window,
+        q_chunk=min(q_chunk, l), kv_chunk=min(kv_chunk, l))
+    return linear(out.reshape(b, l, cfg.eff_n_heads * cfg.head_dim_), p["o"])
+
+
+def blockwise_attention(q, k, v, positions=None, *, causal, window,
+                        q_chunk, kv_chunk):
+    """Flash-style chunked attention with online softmax.
+
+    ``q [B, L, Hq, D]``, ``k/v [B, M, Hkv, D]``.  GQA is computed by
+    reshaping q to ``[B, L, Hkv, G, D]`` — the kv tensors are never
+    repeated/materialized per q-head.
+
+    §Perf iteration A (see EXPERIMENTS.md): masks are derived from *chunk
+    indices* — one shared ``[Cq, Ck]`` predicate instead of a per-batch-row
+    ``[B, Cq, Ck]`` tensor — and work is structurally skipped:
+
+    * sliding-window layers take the *banded* path: each q chunk touches
+      only the ceil((W+Cq)/Ck)+1 kv chunks its window can reach (static);
+    * causal full-attention skips strictly-acausal chunk pairs with a
+      ``lax.cond`` (no compute, no memory traffic on the skipped branch).
+    """
+    b, l, hq, d = q.shape
+    m, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    assert l % q_chunk == 0 and m % kv_chunk == 0, (l, q_chunk, m, kv_chunk)
+    nq, nk = l // q_chunk, m // kv_chunk
+    scale = d ** -0.5
+    cq, ck = q_chunk, kv_chunk
+
+    qr = (q.reshape(b, nq, cq, hkv, g, d) * scale).astype(q.dtype)
+    kr = k.reshape(b, nk, ck, hkv, d)
+    vr = v.reshape(b, nk, ck, hkv, d)
+
+    banded = (causal and window is not None and window < m)
+    if banded:
+        # ---- banded path: static kv band per q chunk -------------------
+        n_need = min((window - 1 + cq - 1) // ck + 2, nk)
+
+        def q_step(_, qi):
+            qb, iq = qi                       # [B, Cq, Hkv, G, D], scalar
+            last = (iq * cq + cq - 1) // ck   # last kv chunk in band
+            first = jnp.maximum(last - (n_need - 1), 0)
+            kb = lax.dynamic_slice_in_dim(kr, first, n_need, axis=1)
+            vb = lax.dynamic_slice_in_dim(vr, first, n_need, axis=1)
+            kb = kb.reshape(b, n_need * ck, hkv, d)
+            vb = vb.reshape(b, n_need * ck, hkv, d)
+            rows = iq * cq + jnp.arange(cq)
+            cols = first * ck + jnp.arange(n_need * ck)
+            dp = rows[:, None] - cols[None, :]
+            msk = (dp >= 0) & (dp < window)   # [Cq, n_need*Ck] shared
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            w = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(vb.dtype), vb)
+            return None, o.astype(q.dtype)
+
+        # checkpoint per q-chunk: backward recomputes the (Cq x band)
+        # scores instead of carrying nq stacked score residuals (iter A3)
+        _, out = lax.scan(jax.checkpoint(q_step), None,
+                          (qr.swapaxes(0, 1), jnp.arange(nq)))
+        return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, l, hq, d)
+
+    # ---- general path: online softmax over kv chunks -------------------
+    def q_step(_, qi):
+        qb, iq = qi
+
+        def kv_step(carry, ki):
+            acc, mx, den = carry
+            kb, vb, jk = ki               # [B, Ck, Hkv, D], ..., scalar
+
+            def compute(c):
+                acc, mx, den = c
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                               preferred_element_type=jnp.float32)
+                dp = (iq * cq + jnp.arange(cq))[:, None] \
+                    - (jk * ck + jnp.arange(ck))[None, :]
+                msk = jnp.ones((cq, ck), bool)
+                if causal:
+                    msk = msk & (dp >= 0)
+                if window is not None:
+                    msk = msk & (dp < window)
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+                new_mx = jnp.maximum(mx, s.max(axis=-1))
+                alpha = jnp.exp(mx - new_mx)
+                ps = jnp.exp(s - new_mx[..., None])
+                den2 = den * alpha + ps.sum(axis=-1)
+                pv = jnp.einsum("bhgqk,bkhd->bqhgd", ps.astype(vb.dtype), vb)
+                acc2 = acc * alpha.transpose(0, 3, 1, 2)[..., None] \
+                    .astype(acc.dtype) + pv
+                return acc2, new_mx, den2
+
+            if causal:  # skip strictly-acausal chunk pairs entirely
+                carry = lax.cond(jk * ck <= iq * cq + cq - 1, compute,
+                                 lambda c: c, carry)
+            else:
+                carry = compute(carry)
+            return carry, None
+
+        acc0 = jnp.zeros(qb.shape, jnp.float32)
+        mx0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        den0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        (acc, _, den), _ = lax.scan(
+            kv_step, (acc0, mx0, den0),
+            (kr.swapaxes(0, 1), vr.swapaxes(0, 1), jnp.arange(nk)))
+        den = jnp.maximum(den, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, (acc / den).astype(q.dtype)
+
+    _, out = lax.scan(jax.checkpoint(q_step), None,
+                      (qr.swapaxes(0, 1), jnp.arange(nq)))
+    # out: [nq, B, Cq, Hkv, G, D] -> [B, L, Hq, D]
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, l, hq, d)
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Per-layer KV cache [stacked over layers by the caller].
+
+    Caches hold only the REAL kv heads: padded heads (head_pad_factor) are
+    zero and attended only by padded q heads whose output is discarded —
+    storing them would double decode cache traffic for nothing."""
+    hd = cfg.head_dim_
+    cache_len = max_len if cfg.sliding_window is None \
+        else min(max_len, cfg.sliding_window)
+    shape = (batch, cache_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(p, x, cache, cfg: ModelConfig, pos, *, window=None,
+               full_cache_len=None):
+    """Single-token decode.  ``x [B, 1, D]``, ``pos [B]`` absolute position;
+    cache k/v ``[B, C, Hkv, D]`` is a ring buffer when ``window`` is set."""
+    b = x.shape[0]
+    hd = cfg.head_dim_
+    # decode uses REAL heads only (cache excludes zero pad heads)
+    q = linear(x, p["q"]).reshape(b, 1, cfg.eff_n_heads, hd)[:, :, :cfg.n_heads]
+    k = linear(x, p["k"]).reshape(b, 1, cfg.eff_n_kv_heads,
+                                  hd)[:, :, :cfg.n_kv_heads]
+    v = linear(x, p["v"]).reshape(b, 1, cfg.eff_n_kv_heads,
+                                  hd)[:, :, :cfg.n_kv_heads]
+    cos, sin = rope_freqs(hd, cfg.rope_theta, pos[:, None])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    c = cache["k"].shape[1]
+    slot = (pos % c).astype(jnp.int32)
+    ck = _ring_write(cache["k"], k[:, 0], slot)
+    cv = _ring_write(cache["v"], v[:, 0], slot)
+
+    # positions currently held by each ring slot
+    slot_ids = jnp.arange(c)[None, :]
+    wrapped = pos[:, None] - ((slot[:, None] - slot_ids) % c)
+    valid = (wrapped >= 0) & (wrapped <= pos[:, None])
+    if window is not None:
+        valid = valid & (wrapped > pos[:, None] - window)
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    qr = q.reshape(b, cfg.n_kv_heads, g, hd) * hd ** -0.5
+    s = jnp.einsum("bhgd,bchd->bhgc", qr, ck,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", w.astype(cv.dtype), cv)
+    o_flat = o.reshape(b, 1, cfg.n_heads * hd)
+    if cfg.head_pad_factor > 1:  # zero-fill pad-head rows for the o-proj
+        o_flat = jnp.pad(o_flat, ((0, 0), (0, 0),
+                                  (0, (cfg.eff_n_heads - cfg.n_heads) * hd)))
+    y = linear(o_flat, p["o"])
+    return y, {"k": ck, "v": cv}
+
+
+def _ring_write(buf, val, slot):
+    """``buf [B, C, ...]`` <- ``val [B, ...]`` at per-row ``slot [B]``.
+
+    A per-row scatter (one slot written) — not a one-hot blend, which would
+    rewrite the entire cache every step and double the decode memory term.
+    """
+    return buf.at[jnp.arange(buf.shape[0]), slot].set(val.astype(buf.dtype))

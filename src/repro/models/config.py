@@ -1,0 +1,148 @@
+"""Unified model configuration covering all 10 assigned architectures.
+
+One dataclass; every block type (GQA attention, MLA, MoE FFN, Mamba2 SSD,
+Hymba parallel-hybrid) is switched by fields.  Configs for the assigned
+archs live in ``repro.configs.<id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    # -- trunk --
+    num_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    vocab_pad_multiple: int = 128           # TPU-friendly embedding padding
+    max_seq_len: int = 4096
+    rope_theta: float = 1e4
+    rms_norm_eps: float = 1e-6
+    qkv_bias: bool = False                  # Qwen-style
+    head_pad_factor: int = 1                # pad (q, kv) heads by this factor
+    # (x-factor padding preserves the GQA grouping i//g exactly; padded o-proj
+    #  rows are zero so outputs are bit-identical — §Perf iteration B1)
+    tie_embeddings: bool = False
+    causal: bool = True                     # False -> encoder (HuBERT)
+    sliding_window: Optional[int] = None    # attention window (None = full)
+    global_attn_layers: tuple = ()          # layers that override the window
+    # -- attention flavor --
+    attn_type: str = "gqa"                  # "gqa" | "mla" | "none"
+    # MLA (DeepSeek-V2 / MiniCPM3)
+    q_lora_rank: Optional[int] = None
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # -- FFN flavor --
+    moe: bool = False
+    n_routed_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 2
+    moe_d_ff: int = 0                       # per-expert hidden dim
+    first_k_dense: int = 0                  # DeepSeek: first k layers use dense FFN
+    moe_capacity_factor: float = 1.25
+    # -- SSM (Mamba2 SSD) --
+    block_type: str = "attn"                # "attn" | "ssm" | "hybrid"
+    ssm_state: int = 128
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    ssm_groups: int = 1
+    # -- multimodal stub frontends --
+    modality: str = "text"                  # "text" | "audio" | "vision"
+    frontend_dim: int = 0                   # stub feature dim (CLIP=1024 etc.)
+    num_patches: int = 0                    # vision tokens per example
+    # -- numerics / remat --
+    dtype: str = "bfloat16"                 # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: str = "full"                     # "none" | "full" (per-layer)
+
+    # ------------------------------------------------------------- derived
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def eff_n_heads(self) -> int:
+        return self.n_heads * self.head_pad_factor
+
+    @property
+    def eff_n_kv_heads(self) -> int:
+        return self.n_kv_heads * self.head_pad_factor
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def d_inner(self) -> int:               # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def qk_head_dim(self) -> int:            # MLA per-head q/k dim
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+    def num_params(self) -> int:
+        """Analytic parameter count (excluding stub frontends)."""
+        d, v = self.d_model, self.padded_vocab
+        n = v * d                                  # embed
+        if not self.tie_embeddings:
+            n += d * v                             # lm head
+        per_layer = 2 * d                          # norms
+        if self.block_type in ("attn", "hybrid"):
+            per_layer += self._attn_params()
+        if self.block_type in ("ssm", "hybrid"):
+            per_layer += self._ssm_params()
+        if self.block_type != "ssm":
+            moe_layers = max(self.num_layers - self.first_k_dense, 0) if self.moe else 0
+            dense_layers = self.num_layers - moe_layers
+            if self.moe:
+                per_moe = (self.n_routed_experts + self.n_shared_experts) \
+                    * 3 * d * self.moe_d_ff + d * self.n_routed_experts
+                n += moe_layers * per_moe
+                n += dense_layers * 3 * d * self.d_ff
+                per_layer_ffn = 0
+            else:
+                per_layer_ffn = 3 * d * self.d_ff
+            per_layer += per_layer_ffn
+        n += self.num_layers * per_layer + 2 * d
+        return n
+
+    def _attn_params(self) -> int:
+        d = self.d_model
+        if self.attn_type == "mla":
+            n = 0
+            if self.q_lora_rank:
+                n += d * self.q_lora_rank + self.q_lora_rank * self.n_heads * self.qk_head_dim
+            else:
+                n += d * self.n_heads * self.qk_head_dim
+            n += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+            n += self.kv_lora_rank * self.n_heads * (self.qk_nope_head_dim + self.v_head_dim)
+            n += self.n_heads * self.v_head_dim * d
+            return n
+        hd = self.head_dim_
+        return (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                + self.n_heads * hd * d)
+
+    def _ssm_params(self) -> int:
+        d, di = self.d_model, self.d_inner
+        conv_dim = di + 2 * self.ssm_groups * self.ssm_state
+        return (d * (2 * di + 2 * self.ssm_groups * self.ssm_state + self.ssm_heads)
+                + conv_dim * self.ssm_conv + 3 * self.ssm_heads + di * d)

@@ -1,0 +1,57 @@
+"""Hymba-style hybrid block: parallel attention + Mamba2 heads.
+
+Per arXiv:2411.13676, each layer runs an attention path and an SSM path on
+the same normalized input *in parallel*; the outputs are per-channel
+normalized and fused with learnable per-dim vectors (β).  Attention is
+sliding-window except for designated global layers (first / middle / last),
+which is what makes ``long_500k`` decodable: the KV memory is O(window) per
+local layer while the SSM path carries unbounded context in O(1) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mamba2
+from .config import ModelConfig
+from .layers import ParamBuilder, rms_norm
+
+
+def hybrid_init(pb: ParamBuilder, cfg: ModelConfig):
+    attention.gqa_init(pb, cfg)
+    mamba2.mamba2_init(pb, cfg)
+    sub = ParamBuilder(pb.key(), pb.dtype)
+    sub.norm("attn_out_norm", cfg.d_model)
+    sub.norm("ssm_out_norm", cfg.d_model)
+    sub.raw("beta_attn", jnp.full((cfg.d_model,), 0.5, pb.dtype), (None,))
+    sub.raw("beta_ssm", jnp.full((cfg.d_model,), 0.5, pb.dtype), (None,))
+    p, s = sub.build()
+    pb.sub("fuse", p, s)
+    return pb
+
+
+def _fuse(pf, cfg: ModelConfig, a_out, s_out):
+    a = rms_norm(a_out, pf["attn_out_norm"]["scale"], cfg.rms_norm_eps)
+    s = rms_norm(s_out, pf["ssm_out_norm"]["scale"], cfg.rms_norm_eps)
+    return (a * pf["beta_attn"].astype(a.dtype)
+            + s * pf["beta_ssm"].astype(s.dtype))
+
+
+def hybrid_forward(p, x, cfg: ModelConfig, positions, *, window=None,
+                   q_chunk=512, kv_chunk=1024):
+    a_out = attention.gqa_forward(p["attn"], x, cfg, positions, window=window,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk)
+    s_out, _, _ = mamba2.mamba2_forward(p["ssm"], x, cfg)
+    return _fuse(p["fuse"], cfg, a_out, s_out)
+
+
+def hybrid_decode(p, x, cache, cfg: ModelConfig, pos, *, window=None):
+    a_out, kv = attention.gqa_decode(p["attn"], x, cache["kv"], cfg, pos,
+                                     window=window)
+    s_out, ssm = mamba2.mamba2_decode(p["ssm"], x, cache["ssm"], cfg)
+    return _fuse(p["fuse"], cfg, a_out, s_out), {"kv": kv, "ssm": ssm}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {"kv": attention.init_cache(cfg, batch, max_len, dtype),
+            "ssm": mamba2.init_state(cfg, batch, dtype)}

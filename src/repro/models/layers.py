@@ -1,0 +1,141 @@
+"""Shared neural building blocks (pure JAX, functional, param-dict based).
+
+Parameters are plain nested dicts of ``jnp.ndarray``; every initializer
+returns ``(params, specs)`` where ``specs`` mirrors the param tree with
+*logical axis name* tuples — ``repro.sharding.rules`` maps those to mesh
+``PartitionSpec``s, so distribution lives entirely outside the model code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary (see repro/sharding/rules.py):
+#   "embed"  — the d_model dim (FSDP-sharded over data)
+#   "vocab"  — vocabulary (TP over model)
+#   "heads"  — fused attention head dim (TP over model)
+#   "kv"     — fused kv head dim
+#   "ff"     — MLP hidden (TP over model)
+#   "experts"— MoE expert dim (EP over model)
+#   "lora"   — MLA latent rank
+#   "inner"  — SSM inner width
+#   None     — replicated
+
+
+def dense_init(key, d_in, d_out, in_axis, out_axis, dtype, scale=None):
+    scale = scale or (1.0 / np.sqrt(d_in))
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    return w, (in_axis, out_axis)
+
+
+class ParamBuilder:
+    """Collects (param, spec) pairs into parallel pytrees."""
+
+    def __init__(self, key, param_dtype):
+        self._key = key
+        self.dtype = param_dtype
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, name, d_in, d_out, in_axis="embed", out_axis=None,
+              bias=False, scale=None):
+        w, spec = dense_init(self.key(), d_in, d_out, in_axis, out_axis,
+                             self.dtype, scale)
+        self.params[name] = {"w": w}
+        self.specs[name] = {"w": spec}
+        if bias:
+            self.params[name]["b"] = jnp.zeros((d_out,), self.dtype)
+            self.specs[name]["b"] = (out_axis,)
+        return self
+
+    def norm(self, name, dim):
+        self.params[name] = {"scale": jnp.ones((dim,), self.dtype)}
+        self.specs[name] = {"scale": (None,)}
+        return self
+
+    def table(self, name, shape, axes, scale=0.02):
+        self.params[name] = jax.random.normal(self.key(), shape, self.dtype) * scale
+        self.specs[name] = axes
+        return self
+
+    def raw(self, name, value, axes):
+        self.params[name] = value
+        self.specs[name] = axes
+        return self
+
+    def sub(self, name, params, specs):
+        self.params[name] = params
+        self.specs[name] = specs
+        return self
+
+    def build(self):
+        return self.params, self.specs
+
+
+# ------------------------------------------------------------------ ops
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def linear(x, p):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def swiglu(x, p):
+    """SwiGLU MLP: ``w2(silu(w1 x) * w3 x)`` — Llama/Qwen/DeepSeek style."""
+    gate = linear(x, p["w1"])
+    up = linear(x, p["w3"])
+    return linear(jax.nn.silu(gate) * up, p["w2"])
+
+
+def swiglu_init(pb: ParamBuilder, name, d_model, d_ff):
+    sub = ParamBuilder(pb.key(), pb.dtype)
+    sub.dense("w1", d_model, d_ff, "embed", "ff")
+    sub.dense("w3", d_model, d_ff, "embed", "ff")
+    sub.dense("w2", d_ff, d_model, "ff", "embed")
+    p, s = sub.build()
+    pb.sub(name, p, s)
+    return pb
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim, theta, positions):
+    """``positions [...]`` -> (cos, sin) ``[..., head_dim/2]``."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate pairs. ``x [..., L, H, D]``, cos/sin ``[..., L, D/2]``."""
+    x1, x2 = jnp.split(x, 2, axis=-1)       # rotate-half convention
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------- losses
+def softmax_xent(logits, labels, mask, vocab_size):
+    """Mean masked cross-entropy; pads beyond ``vocab_size`` excluded."""
+    logits = logits.astype(jnp.float32)
+    pad = logits.shape[-1] - vocab_size
+    if pad:
+        neg = jnp.full((pad,), -1e30, jnp.float32)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((vocab_size,), jnp.float32), neg])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,196 @@
+"""Mamba2 — SSD (state-space duality) block, chunk-parallel scan.
+
+Follows "Transformers are SSMs" (arXiv:2405.21060): per-head scalar decay
+``A``, input-dependent ``dt`` (softplus), grouped ``B``/``C`` projections,
+causal depthwise conv on the (x, B, C) channels, gated RMSNorm output.
+
+Train/prefill uses the chunked SSD algorithm: within-chunk attention-like
+term + cross-chunk recurrent state carried by ``lax.scan`` — O(L) time,
+O(L·Q) memory, MXU-friendly (chunk matmuls of size Q x N/P).  Decode is the
+O(1) recurrent update; the SSM state plays exactly the role of the Kalman
+state in the paper's trackers (fixed-size per-stream state carried across
+frames — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .config import ModelConfig
+from .layers import ParamBuilder, linear, rms_norm
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def mamba2_init(pb: ParamBuilder, cfg: ModelConfig):
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    cd = conv_dim(cfg)
+    sub = ParamBuilder(pb.key(), pb.dtype)
+    sub.dense("in_proj", d, 2 * di + 2 * g * n + h, "embed", "inner")
+    sub.table("conv_w", (cfg.ssm_conv, cd), (None, "inner"), scale=0.1)
+    sub.raw("conv_b", jnp.zeros((cd,), pb.dtype), ("inner",))
+    sub.raw("a_log", jnp.asarray(np.log(np.linspace(1.0, 16.0, h)), pb.dtype),
+            (None,))
+    sub.raw("dt_bias", jnp.zeros((h,), pb.dtype), (None,))
+    sub.raw("d_skip", jnp.ones((h,), pb.dtype), (None,))
+    sub.norm("out_norm", di)
+    sub.dense("out_proj", di, d, "inner", "embed")
+    p, s = sub.build()
+    pb.sub("ssm", p, s)
+    return pb
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_dim(cfg)]
+    dt = zxbcdt[..., di + conv_dim(cfg):]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, carry=None):
+    """Depthwise causal conv, width K.  ``xbc [B, L, C]``, ``w [K, C]``.
+
+    ``carry [B, K-1, C]`` holds the previous step's tail for decode; returns
+    the new tail so prefill can hand off to decode."""
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros(xbc.shape[:1] + (k - 1, xbc.shape[-1]), xbc.dtype)
+    full = jnp.concatenate([carry, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(k))
+    out = jax.nn.silu(out + b.astype(xbc.dtype))
+    return out, full[:, -(k - 1):]
+
+
+def ssd_chunked(x, dt, a, b, c, cfg: ModelConfig, h0=None):
+    """Chunk-parallel SSD.
+
+    ``x [B, L, H, P]``, ``dt [B, L, H]`` (post-softplus), ``a [H]`` (negative),
+    ``b``/``c`` ``[B, L, G, N]``.  Returns ``y [B, L, H, P]`` and final state
+    ``[B, H, N, P]``.
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = min(cfg.ssm_chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+    rep = h // g
+
+    xr = x.reshape(bsz, nc, q, h, p)
+    dtr = dt.reshape(bsz, nc, q, h)
+    br = b.reshape(bsz, nc, q, g, n)
+    cr = c.reshape(bsz, nc, q, g, n)
+    # decay logs within chunk
+    da = dtr * a.astype(dtr.dtype)                       # [B, NC, Q, H] (<=0)
+    cum = jnp.cumsum(da, axis=2)                         # inclusive cumsum
+
+    def chunk_step(hprev, inp):
+        xq, dtq, bq, cq, cumq = inp                      # per-chunk slices
+        # ---- intra-chunk (attention-like) ----
+        # scores[b, h, i, j] = (C_i . B_j)_{g(h)} * exp(cum_i - cum_j) * dt_j
+        cb = jnp.einsum("bign,bjgn->bgij", cq, bq,
+                        preferred_element_type=jnp.float32)  # [B, G, Q, Q]
+        decay = cumq[:, :, None, :] - cumq[:, None, :, :]    # [B, i, j, H]
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        # mask the EXPONENT, not the exponential: for j > i the decay is
+        # positive and exp overflows; where() after exp poisons gradients
+        # (inf * 0 = nan in the backward).
+        decay = jnp.where(mask[None, :, :, None], decay, -jnp.inf)
+        lmat = jnp.exp(decay)
+        scores = (cb[:, :, None] * lmat.transpose(0, 3, 1, 2)
+                  .reshape(bsz, g, rep, q, q)
+                  * dtq.transpose(0, 2, 1).reshape(bsz, g, rep, 1, q))
+        y_intra = jnp.einsum("bgrij,bjgrp->bigrp", scores.astype(jnp.float32),
+                             xq.reshape(bsz, q, g, rep, p).astype(jnp.float32))
+        # ---- inter-chunk: carried state read through C, decayed to i ----
+        hh = hprev.reshape(bsz, g, rep, n, p)
+        y_inter = jnp.einsum("bign,bgrnp->bigrp", cq.astype(jnp.float32), hh)
+        y_inter = y_inter * jnp.exp(cumq).reshape(bsz, q, g, rep)[..., None]
+        # ---- state update: decay old state to chunk end, add new inputs ----
+        seg = jnp.exp(cumq[:, -1:, :] - cumq) * dtq          # [B, Q, H]
+        bx = jnp.einsum("bjgn,bjgrp->bgrnp", bq.astype(jnp.float32),
+                        (xq * seg[..., None]).reshape(bsz, q, g, rep, p)
+                        .astype(jnp.float32))
+        hnew = (hprev * jnp.exp(cumq[:, -1]).reshape(bsz, h)[:, :, None, None]
+                + bx.reshape(bsz, h, n, p))
+        y = (y_intra + y_inter).reshape(bsz, q, h, p)
+        return hnew, y.astype(x.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    # checkpoint per chunk: the backward recomputes the [B, H, Q, Q]
+    # decay/score tensors instead of storing them stacked over chunks
+    hfin, ys = lax.scan(
+        jax.checkpoint(chunk_step), h0,
+        (xr.swapaxes(0, 1), dtr.swapaxes(0, 1), br.swapaxes(0, 1),
+         cr.swapaxes(0, 1), cum.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(bsz, l, h, p)
+    return y, hfin
+
+
+def ssd_sequential(x, dt, a, b, c, h0=None):
+    """Naive O(L) recurrence — test oracle for :func:`ssd_chunked`."""
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def step(hs, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,G,N], [B,G,N]
+        da = jnp.exp(dtt * a.astype(dtt.dtype))              # [B, H]
+        bth = jnp.repeat(bt, rep, axis=1)                    # [B, H, N]
+        cth = jnp.repeat(ct, rep, axis=1)
+        hs = (hs * da[..., None, None]
+              + jnp.einsum("bhn,bhp->bhnp", bth.astype(jnp.float32),
+                           (xt * dtt[..., None]).astype(jnp.float32)))
+        y = jnp.einsum("bhn,bhnp->bhp", cth.astype(jnp.float32), hs)
+        return hs, y
+
+    hfin, ys = lax.scan(step, h0, (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                                   b.swapaxes(0, 1), c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), hfin
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, conv_carry=None, h0=None):
+    """Full Mamba2 mixer. ``x [B, L, D]`` -> ``[B, L, D]`` (+ final states)."""
+    bsz, l, _ = x.shape
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    z, xbc, dt = _split_proj(cfg, linear(x, p["in_proj"]))
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_carry)
+    xs = xbc[..., :cfg.d_inner].reshape(bsz, l, h, pdim)
+    bmat = xbc[..., cfg.d_inner:cfg.d_inner + g * n].reshape(bsz, l, g, n)
+    cmat = xbc[..., cfg.d_inner + g * n:].reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, hfin = ssd_chunked(xs, dt.astype(x.dtype), a, bmat, cmat, cfg, h0)
+    y = y + xs * p["d_skip"].astype(x.dtype)[:, None]
+    y = y.reshape(bsz, l, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"]["scale"], cfg.rms_norm_eps)
+    return linear(y, p["out_proj"]), conv_tail, hfin
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype):
+    """Decode-time recurrent state: SSD state + conv tail."""
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                        cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+    }
+
+
+def mamba2_decode(p, x, state, cfg: ModelConfig):
+    """O(1) single-token step. ``x [B, 1, D]`` (chunk size degenerates to 1)."""
+    import dataclasses
+    cfg1 = dataclasses.replace(cfg, ssm_chunk=1)
+    y, conv_tail, hfin = mamba2_forward(
+        p, x, cfg1, conv_carry=state["conv"], h0=state["h"])
+    return y, {"h": hfin, "conv": conv_tail}

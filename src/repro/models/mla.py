@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2, MiniCPM3).
+
+Keys/values are compressed into a per-token latent ``c_kv`` of rank
+``kv_lora_rank`` plus a single shared RoPE key head; the decode cache stores
+only ``kv_lora_rank + qk_rope_head_dim`` floats per token (576 for
+DeepSeek-V2 vs 2 * 128 * 128 for dense MHA — a 57x KV-cache reduction that
+directly multiplies the stream/request batch each chip can hold; see
+DESIGN.md §5).
+
+Decode uses the paper's *matrix absorption*: ``q_nope`` is mapped through
+``W_uk`` into latent space so attention scores are taken directly against
+the compressed cache — no per-token key expansion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, blockwise_attention, _ring_write
+from .config import ModelConfig
+from .layers import ParamBuilder, apply_rope, linear, rms_norm, rope_freqs
+
+
+def mla_init(pb: ParamBuilder, cfg: ModelConfig):
+    sub = ParamBuilder(pb.key(), pb.dtype)
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_head_dim,
+                     cfg.qk_rope_head_dim, cfg.v_head_dim)
+    if cfg.q_lora_rank:
+        sub.dense("q_a", cfg.d_model, cfg.q_lora_rank, "embed", "lora")
+        sub.norm("q_a_norm", cfg.q_lora_rank)
+        sub.dense("q_b", cfg.q_lora_rank, h * (dn + dr), "lora", "heads")
+    else:
+        sub.dense("q", cfg.d_model, h * (dn + dr), "embed", "heads")
+    sub.dense("kv_a", cfg.d_model, cfg.kv_lora_rank + dr, "embed", None)
+    sub.norm("kv_a_norm", cfg.kv_lora_rank)
+    sub.dense("kv_b", cfg.kv_lora_rank, h * (dn + dv), "lora", "heads")
+    sub.dense("o", h * dv, cfg.d_model, "heads", "embed")
+    p, s = sub.build()
+    pb.sub("attn", p, s)
+    return pb
+
+
+def _project_q(p, x, cfg: ModelConfig):
+    b, l, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        q = linear(rms_norm(linear(x, p["q_a"]), p["q_a_norm"]["scale"],
+                            cfg.rms_norm_eps), p["q_b"])
+    else:
+        q = linear(x, p["q"])
+    q = q.reshape(b, l, h, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def _compress_kv(p, x, cfg: ModelConfig, positions):
+    """Returns the cacheable pair (c_kv normalized, k_rope rotated)."""
+    dr = cfg.qk_rope_head_dim
+    kv = linear(x, p["kv_a"])
+    c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_a_norm"]["scale"],
+                    cfg.rms_norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank:][:, :, None, :]  # single shared head
+    cos, sin = rope_freqs(dr, cfg.rope_theta, positions)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(p, x, cfg: ModelConfig, positions, *, window=None,
+                q_chunk: int = 512, kv_chunk: int = 1024):
+    """Train/prefill: expand k/v per head, run blockwise attention with the
+    rope-key folded in as extra head dims (score = qn.kn + qr.kr)."""
+    b, l, _ = x.shape
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_head_dim,
+                     cfg.qk_rope_head_dim, cfg.v_head_dim)
+    q_nope, q_rope = _project_q(p, x, cfg)
+    cos, sin = rope_freqs(dr, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    c_kv, k_rope = _compress_kv(p, x, cfg, positions)
+    kv = linear(c_kv, p["kv_b"]).reshape(b, l, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+
+    # fold the shared rope key into per-head key vectors: K = [k_nope, k_rope]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, l, h, dr))], axis=-1)
+    # pad v to qk dim so blockwise attention sees uniform head dims, slice
+    # after.  blockwise scales by (dn+dr)^-0.5 == DeepSeek's softmax scale.
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    out = blockwise_attention(q, k, v_pad, positions,
+                              causal=cfg.causal, window=window,
+                              q_chunk=min(q_chunk, l), kv_chunk=min(kv_chunk, l))
+    out = out[..., :dv]
+    return linear(out.reshape(b, l, h * dv), p["o"])
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype)}
+
+
+def mla_decode(p, x, cache, cfg: ModelConfig, pos, *, window=None,
+               full_cache_len=None):
+    """Absorbed single-token decode against the compressed cache."""
+    b = x.shape[0]
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_head_dim,
+                     cfg.qk_rope_head_dim, cfg.v_head_dim)
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _project_q(p, x, cfg)            # [B, 1, H, dn/dr]
+    cos, sin = rope_freqs(dr, cfg.rope_theta, pos[:, None])
+    q_rope = apply_rope(q_rope, cos, sin)[:, 0]       # [B, H, dr]
+    c_kv, k_rope = _compress_kv(p, x, cfg, pos[:, None])
+
+    ck = _ring_write(cache["c_kv"], c_kv[:, 0], pos)
+    kr = _ring_write(cache["k_rope"], k_rope[:, 0], pos)
+
+    # absorption: q_lat[b,h,r] = sum_dn q_nope[b,h,dn] * W_uk[r, h, dn]
+    w_kv = p["kv_b"]["w"].reshape(r, h, dn + dv)
+    w_uk, w_uv = w_kv[..., :dn], w_kv[..., dn:]
+    # §Perf C3: keep the CACHE-sized operands in their storage dtype and
+    # accumulate in f32 via preferred_element_type — upcasting ck/kr to f32
+    # triples decode HBM traffic (read bf16 + write/read f32 copies).
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(ck.dtype)
+
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bhr,bcr->bhc", q_lat, ck,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bcd->bhc", q_rope.astype(kr.dtype), kr,
+                      preferred_element_type=jnp.float32)) * scale
+    c = cache["c_kv"].shape[1]
+    valid = (jnp.arange(c)[None, :] <= pos[:, None])
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhc,bcr->bhr", w.astype(ck.dtype), ck,
+                     preferred_element_type=jnp.float32)          # latent ctx
+    o = jnp.einsum("bhr,rhd->bhd", ctx.astype(x.dtype),
+                   w_uv.astype(x.dtype))                          # expand to v
+    y = linear(o.reshape(b, 1, h * dv).astype(x.dtype), p["o"])
+    return y, {"c_kv": ck, "k_rope": kr}

@@ -1,0 +1,131 @@
+"""Model assembly: embeddings + modality frontends + trunk + LM head.
+
+``build_model(cfg)`` returns a :class:`Model` of pure functions:
+
+* ``init(key) -> (params, specs)``
+* ``forward(params, batch, par) -> logits``          (train / encode shape)
+* ``loss(params, batch, par) -> scalar``
+* ``prefill(params, batch, par, cache_len) -> (logits, caches)``
+* ``decode(params, token, pos, caches, par) -> (logits, caches)``
+
+Modality frontends (paper-pool rule): ``[audio]``/``[vlm]`` archs take
+*precomputed* frame/patch embeddings via ``input_specs`` — only the trainable
+projection (LLaVA's mm-projector, HuBERT's mask embedding) is real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .config import ModelConfig
+from .layers import ParamBuilder, linear, rms_norm, softmax_xent
+from .transformer import Parallel
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_caches: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    def init(key):
+        pb = ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+        pb.table("embed", (cfg.padded_vocab, cfg.d_model),
+                 ("vocab", "embed"))
+        if cfg.modality == "vision":
+            sub = ParamBuilder(pb.key(), pb.dtype)
+            sub.dense("fc1", cfg.frontend_dim, cfg.d_model, None, "embed")
+            sub.dense("fc2", cfg.d_model, cfg.d_model, "embed", None)
+            mp, ms = sub.build()
+            pb.sub("mm_projector", mp, ms)
+        if cfg.modality == "audio":
+            pb.raw("mask_emb", 0.02 * jax.random.normal(
+                pb.key(), (cfg.d_model,), pb.dtype), (None,))
+        trunk, trunk_specs = transformer.stack_init(pb.key(), cfg)
+        pb.sub("trunk", trunk, trunk_specs)
+        pb.norm("final_norm", cfg.d_model)
+        if not cfg.tie_embeddings:
+            pb.dense("lm_head", cfg.d_model, cfg.padded_vocab,
+                     "embed", "vocab")
+        return pb.build()
+
+    # ----------------------------------------------------------- embedding
+    def embed_batch(params, batch):
+        dt = jnp.dtype(cfg.dtype)
+        table = params["embed"]
+
+        if cfg.modality == "audio":
+            feats = batch["feats"].astype(dt)                  # [B, L, D]
+            if "mask_spans" in batch:
+                m = batch["mask_spans"][..., None]
+                feats = jnp.where(m, params["mask_emb"].astype(dt), feats)
+            h = feats
+        elif cfg.modality == "vision":
+            tok = jnp.take(table, batch["tokens"], axis=0).astype(dt)
+            patches = batch["patches"].astype(dt)              # [B, Np, F]
+            mp = params["mm_projector"]
+            pe = linear(jax.nn.gelu(linear(patches, mp["fc1"])), mp["fc2"])
+            h = jnp.concatenate([pe, tok], axis=1)
+        else:
+            h = jnp.take(table, batch["tokens"], axis=0).astype(dt)
+
+        b, l = h.shape[0], h.shape[1]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32),
+                                         (b, l))
+        return h, positions
+
+    def head(params, h):
+        h = rms_norm(h, params["final_norm"]["scale"], cfg.rms_norm_eps)
+        if cfg.tie_embeddings:
+            return h @ params["embed"].astype(h.dtype).T
+        return linear(h, params["lm_head"])
+
+    # ------------------------------------------------------------ training
+    def forward(params, batch, par: Parallel = Parallel()):
+        h, positions = embed_batch(params, batch)
+        h = transformer.stack_forward(params["trunk"], h, cfg, positions, par)
+        return head(params, h)
+
+    def loss(params, batch, par: Parallel = Parallel()):
+        logits = forward(params, batch, par)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask",
+                         jnp.ones(labels.shape, jnp.float32))
+        if cfg.modality == "vision":  # logits cover [patches, tokens]
+            logits = logits[:, -labels.shape[1]:]
+        return softmax_xent(logits, labels, mask, cfg.vocab_size)
+
+    # ------------------------------------------------------------- serving
+    def prefill(params, batch, par: Parallel = Parallel(),
+                cache_len: int | None = None):
+        h, positions = embed_batch(params, batch)
+        cache_len = cache_len or cfg.max_seq_len
+        h, caches = transformer.stack_prefill(
+            params["trunk"], h, cfg, positions, par, cache_len,
+            jnp.dtype(cfg.dtype))
+        return head(params, h[:, -1:]), caches
+
+    def decode(params, token, pos, caches, par: Parallel = Parallel()):
+        dt = jnp.dtype(cfg.dtype)
+        h = jnp.take(params["embed"], token, axis=0).astype(dt)  # [B, 1, D]
+        h, caches = transformer.stack_decode(params["trunk"], h, caches, cfg,
+                                             pos, par)
+        return head(params, h), caches
+
+    def init_caches(params, batch: int, cache_len: int):
+        return transformer.init_caches(params["trunk"], cfg, batch,
+                                       cache_len, jnp.dtype(cfg.dtype))
+
+    return Model(cfg, init, forward, loss, prefill, decode, init_caches)

@@ -1,0 +1,336 @@
+"""Unified layer stack: pre-norm blocks, segment-grouped ``lax.scan``.
+
+The stack is split into *segments* of structurally identical layers (same
+FFN kind, same attention window).  Each multi-layer segment is scanned —
+compile time stays O(#segments), not O(depth) — and each segment sizes its
+own KV cache:
+
+* DeepSeek ``first_k_dense``: a leading dense-FFN segment before the MoE
+  segment;
+* Hymba global-vs-local attention: global layers get full-length caches,
+  sliding-window layers get ring caches of window size — this is what makes
+  ``long_500k`` fit in HBM (3 full caches + 29 x 1-KiB-window rings instead
+  of 32 full caches).
+
+Remat: every layer body is ``jax.checkpoint``-wrapped (``cfg.remat='full'``)
+so blockwise-attention score chunks are recomputed, never stored.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention, hybrid, mamba2, mla, moe
+from .config import ModelConfig
+from .layers import ParamBuilder, rms_norm, swiglu, swiglu_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallel:
+    """Runtime distribution context (None mesh = single-device math)."""
+    mesh: Any = None
+    dp_axes: tuple = ("data",)
+    tp_axis: str = "model"
+
+    @staticmethod
+    def local() -> "Parallel":
+        return Parallel()
+
+    def constrain_batch(self, x):
+        """Pin the leading (population) axis to (pod, data) — without this,
+        SPMD propagation can silently drop batch sharding after the
+        vocab-sharded embedding gather and replicate the whole token stream
+        on every device (observed: 10x per-device FLOPs)."""
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if x.shape[0] % _axes_size(self.mesh, self.dp_axes) != 0:
+            return x
+        dp = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        spec = P(dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def _axes_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A run of structurally identical layers."""
+    num_layers: int
+    use_moe: bool
+    window: Optional[int]        # None = full attention
+
+
+def plan_segments(cfg: ModelConfig) -> list[Segment]:
+    """Derive the segment plan from the config."""
+    full = None
+    win = [full] * cfg.num_layers
+    if cfg.sliding_window is not None:
+        win = [cfg.sliding_window] * cfg.num_layers
+        for i in cfg.global_attn_layers:
+            win[i % cfg.num_layers] = full
+    use_moe = [cfg.moe and i >= cfg.first_k_dense
+               for i in range(cfg.num_layers)]
+    segs: list[Segment] = []
+    for i in range(cfg.num_layers):
+        key = (use_moe[i], win[i])
+        if segs and (segs[-1].use_moe, segs[-1].window) == key:
+            segs[-1] = dataclasses.replace(segs[-1],
+                                           num_layers=segs[-1].num_layers + 1)
+        else:
+            segs.append(Segment(1, *key))
+    return segs
+
+
+# ----------------------------------------------------------------- layers
+def layer_init(key, cfg: ModelConfig, use_moe: bool):
+    pb = ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+    pb.norm("norm1", cfg.d_model)
+    if cfg.block_type == "attn":
+        (mla.mla_init if cfg.attn_type == "mla" else attention.gqa_init)(pb, cfg)
+    elif cfg.block_type == "ssm":
+        mamba2.mamba2_init(pb, cfg)
+    elif cfg.block_type == "hybrid":
+        hybrid.hybrid_init(pb, cfg)
+    else:
+        raise ValueError(cfg.block_type)
+    if _has_ffn(cfg):
+        pb.norm("norm2", cfg.d_model)
+        if use_moe:
+            moe.moe_init(pb, cfg)
+        else:
+            swiglu_init(pb, "mlp", cfg.d_model, cfg.d_ff)
+    return pb.build()
+
+
+def _has_ffn(cfg: ModelConfig) -> bool:
+    return cfg.block_type != "ssm" and (cfg.d_ff > 0 or cfg.moe)
+
+
+def _ffn(p, x, cfg, par):
+    h2 = rms_norm(x, p["norm2"]["scale"], cfg.rms_norm_eps)
+    if "moe" in p:
+        y = moe.moe_ffn(p["moe"], h2, cfg, par.mesh, par.dp_axes, par.tp_axis)
+    else:
+        y = swiglu(h2, p["mlp"])
+    return x + y
+
+
+def layer_fwd(p, x, cfg: ModelConfig, positions, window, par: Parallel):
+    """One block, full-sequence (train / encode shape)."""
+    h = rms_norm(x, p["norm1"]["scale"], cfg.rms_norm_eps)
+    if cfg.block_type == "attn":
+        if cfg.attn_type == "mla":
+            mix = mla.mla_forward(p["attn"], h, cfg, positions, window=window)
+        else:
+            mix = attention.gqa_forward(p["attn"], h, cfg, positions,
+                                        window=window)
+    elif cfg.block_type == "ssm":
+        mix, _, _ = mamba2.mamba2_forward(p["ssm"], h, cfg)
+    else:
+        mix = hybrid.hybrid_forward(p, h, cfg, positions, window=window)
+    x = x + mix
+    return _ffn(p, x, cfg, par) if _has_ffn(cfg) else x
+
+
+def layer_decode(p, x, cache, cfg: ModelConfig, pos, window, par: Parallel):
+    """One block, single-token decode."""
+    h = rms_norm(x, p["norm1"]["scale"], cfg.rms_norm_eps)
+    if cfg.block_type == "attn":
+        if cfg.attn_type == "mla":
+            mix, cache = mla.mla_decode(p["attn"], h, cache, cfg, pos,
+                                        window=window)
+        else:
+            mix, cache = attention.gqa_decode(p["attn"], h, cache, cfg, pos,
+                                              window=window)
+    elif cfg.block_type == "ssm":
+        mix, cache = mamba2.mamba2_decode(p["ssm"], h, cache, cfg)
+    else:
+        mix, cache = hybrid.hybrid_decode(p, h, cache, cfg, pos,
+                                          window=window)
+    x = x + mix
+    return (_ffn(p, x, cfg, par) if _has_ffn(cfg) else x), cache
+
+
+def layer_prefill(p, x, cfg: ModelConfig, positions, window, par: Parallel,
+                  cache_cap: int, dtype):
+    """Forward + cache construction (prompt length L, cache capacity cap)."""
+    h = rms_norm(x, p["norm1"]["scale"], cfg.rms_norm_eps)
+    b, l, _ = x.shape
+    if cfg.block_type == "attn":
+        if cfg.attn_type == "mla":
+            mix = mla.mla_forward(p["attn"], h, cfg, positions, window=window)
+            c_kv, k_rope = mla._compress_kv(p["attn"], h, cfg, positions)
+            cache = mla.init_cache(cfg, b, cache_cap, dtype)
+            cache = {"c_kv": cache["c_kv"].at[:, :l].set(c_kv.astype(dtype)),
+                     "k_rope": cache["k_rope"].at[:, :l].set(
+                         k_rope.astype(dtype))}
+        else:
+            mix = attention.gqa_forward(p["attn"], h, cfg, positions,
+                                        window=window)
+            cache = _fill_kv_cache(p["attn"], h, cfg, positions, cache_cap,
+                                   window, dtype)
+    elif cfg.block_type == "ssm":
+        mix, conv_tail, hfin = mamba2.mamba2_forward(p["ssm"], h, cfg)
+        cache = {"h": hfin, "conv": conv_tail}
+    else:
+        a_mix = attention.gqa_forward(p["attn"], h, cfg, positions,
+                                      window=window)
+        kvc = _fill_kv_cache(p["attn"], h, cfg, positions, cache_cap,
+                             window, dtype)
+        s_mix, conv_tail, hfin = mamba2.mamba2_forward(p["ssm"], h, cfg)
+        mix = hybrid._fuse(p["fuse"], cfg, a_mix, s_mix)
+        cache = {"kv": kvc, "ssm": {"h": hfin, "conv": conv_tail}}
+    x = x + mix
+    return (_ffn(p, x, cfg, par) if _has_ffn(cfg) else x), cache
+
+
+def _fill_kv_cache(p, h, cfg, positions, cache_cap, window, dtype):
+    from .layers import apply_rope, linear, rope_freqs
+    b, l, _ = h.shape
+    hd = cfg.head_dim_
+    k = linear(h, p["k"]).reshape(b, l, cfg.eff_n_kv_heads,
+                                  hd)[:, :, :cfg.n_kv_heads]
+    v = linear(h, p["v"]).reshape(b, l, cfg.eff_n_kv_heads,
+                                  hd)[:, :, :cfg.n_kv_heads]
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+    k = apply_rope(k, cos, sin)
+    cap = cache_cap if window is None else min(cache_cap, window)
+    shape = (b, cap, cfg.n_kv_heads, hd)
+    kk, vv = k[:, -cap:], v[:, -cap:]
+    slots = positions[:, -kk.shape[1]:] % cap
+    rows = jnp.arange(b)[:, None]
+    ck = jnp.zeros(shape, dtype).at[rows, slots].set(kk.astype(dtype))
+    cv = jnp.zeros(shape, dtype).at[rows, slots].set(vv.astype(dtype))
+    return {"k": ck, "v": cv}
+
+
+def _seg_cache(cfg: ModelConfig, batch: int, cache_cap: int,
+               window: Optional[int], dtype):
+    cap = cache_cap if window is None else min(cache_cap, window)
+    if cfg.block_type == "attn":
+        if cfg.attn_type == "mla":
+            return mla.init_cache(cfg, batch, cache_cap, dtype)
+        return attention.init_cache(
+            dataclasses.replace(cfg, sliding_window=window), batch,
+            cache_cap, dtype)
+    if cfg.block_type == "ssm":
+        return mamba2.init_state(cfg, batch, dtype)
+    return {"kv": attention.init_cache(
+                dataclasses.replace(cfg, sliding_window=window), batch,
+                cache_cap, dtype),
+            "ssm": mamba2.init_state(cfg, batch, dtype)}
+
+
+# ------------------------------------------------------------------ stack
+def stack_init(key, cfg: ModelConfig):
+    """Returns (params, specs): a list of per-segment stacked params."""
+    segs = plan_segments(cfg)
+    keys = jax.random.split(key, len(segs))
+    seg_params, seg_specs = [], []
+    for sk, seg in zip(keys, segs):
+        if seg.num_layers == 1:
+            p, s = layer_init(sk, cfg, seg.use_moe)
+            seg_params.append(p)
+            seg_specs.append(s)
+            continue
+        cap = {}
+
+        def _one(k, _seg=seg, _cap=cap):
+            p, s = layer_init(k, cfg, _seg.use_moe)
+            _cap["s"] = s
+            return p
+
+        stacked = jax.vmap(_one)(jax.random.split(sk, seg.num_layers))
+        seg_params.append(stacked)
+        seg_specs.append(jax.tree.map(
+            lambda sp: (None,) + tuple(sp), cap["s"],
+            is_leaf=lambda sp: isinstance(sp, tuple)))
+    return {"segments": seg_params}, {"segments": seg_specs}
+
+
+def _maybe_remat(cfg, fn, static_argnums):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, static_argnums=static_argnums)
+    return fn
+
+
+def stack_forward(params, x, cfg: ModelConfig, positions, par: Parallel):
+    segs = plan_segments(cfg)
+    fwd = _maybe_remat(cfg, layer_fwd, (2, 4, 5))
+    x = par.constrain_batch(x)
+    for seg, p in zip(segs, params["segments"]):
+        if seg.num_layers == 1:
+            x = par.constrain_batch(fwd(p, x, cfg, positions, seg.window,
+                                        par))
+        else:
+            def body(carry, pl, _seg=seg):
+                y = fwd(pl, carry, cfg, positions, _seg.window, par)
+                return par.constrain_batch(y), None
+            x, _ = lax.scan(body, x, p)
+    return x
+
+
+def stack_decode(params, x, caches, cfg: ModelConfig, pos, par: Parallel):
+    segs = plan_segments(cfg)
+    new_caches = []
+    x = par.constrain_batch(x)
+    for seg, p, c in zip(segs, params["segments"], caches["segments"]):
+        if seg.num_layers == 1:
+            x, c2 = layer_decode(p, x, c, cfg, pos, seg.window, par)
+            x = par.constrain_batch(x)
+        else:
+            def body(carry, inp, _seg=seg):
+                pl, cl = inp
+                y, c2 = layer_decode(pl, carry, cl, cfg, pos, _seg.window,
+                                     par)
+                return par.constrain_batch(y), c2
+            x, c2 = lax.scan(body, x, (p, c))
+        new_caches.append(c2)
+    return x, {"segments": new_caches}
+
+
+def stack_prefill(params, x, cfg: ModelConfig, positions, par: Parallel,
+                  cache_len: int, cache_dtype):
+    segs = plan_segments(cfg)
+    pre = _maybe_remat(cfg, layer_prefill, (2, 4, 5, 6, 7))
+    seg_caches = []
+    x = par.constrain_batch(x)
+    for seg, p in zip(segs, params["segments"]):
+        if seg.num_layers == 1:
+            x, c = pre(p, x, cfg, positions, seg.window, par, cache_len,
+                       cache_dtype)
+            x = par.constrain_batch(x)
+        else:
+            def body(carry, pl, _seg=seg):
+                y, c = pre(pl, carry, cfg, positions, _seg.window, par,
+                           cache_len, cache_dtype)
+                return par.constrain_batch(y), c
+            x, c = lax.scan(body, x, p)
+        seg_caches.append(c)
+    return x, {"segments": seg_caches}
+
+
+def init_caches(params, cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    """Zero caches shaped like what prefill produces / decode exchanges."""
+    segs = plan_segments(cfg)
+    out = []
+    for seg in segs:
+        single = _seg_cache(cfg, batch, cache_len, seg.window, dtype)
+        if seg.num_layers == 1:
+            out.append(single)
+        else:
+            out.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (seg.num_layers,) + a.shape).copy(), single))
+    return {"segments": out}

@@ -1,0 +1,2 @@
+from .rules import LOGICAL_RULES, spec_for_logical, params_pspecs  # noqa: F401
+from .specs import batch_pspecs, cache_pspecs, named  # noqa: F401

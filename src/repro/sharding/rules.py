@@ -1,0 +1,84 @@
+"""Logical-axis -> mesh-axis rules (shape-aware).
+
+Model code annotates every parameter dim with a logical name
+(``repro.models.layers``).  This module maps those names onto the mesh:
+
+=========  ==================  =====================================
+logical    mesh axis           meaning
+=========  ==================  =====================================
+embed      data                d_model dim — FSDP (ZeRO-3) sharding
+vocab      model               embedding/LM-head vocab — TP
+heads      model               fused attention heads — TP
+kv         model               fused KV heads — TP
+ff         model               MLP hidden — TP
+experts    model               MoE expert dim — EP
+ff_exp     data                per-expert hidden — FSDP
+inner      model               SSM inner width — TP
+lora       None                MLA latent ranks (small, replicated)
+=========  ==================  =====================================
+
+Rules are *shape-aware*: a dim whose size does not divide the mapped mesh
+axes falls back to replication (e.g. qwen2-7b's 28 heads on a 16-way model
+axis).  The roofline report surfaces the cost; head-padding is a §Perf
+hillclimb, not silently forced.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES = {
+    "embed": ("data",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "ff_exp": ("data",),
+    "inner": ("model",),
+    "lora": (),
+    None: (),
+}
+
+
+def _axes_size(mesh: Mesh, axes: tuple) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], initial=1))
+
+
+def spec_for_logical(logical: tuple, shape: tuple, mesh: Mesh,
+                     rules=None) -> P:
+    """Build a PartitionSpec for one param from its logical axes + shape."""
+    rules = rules or LOGICAL_RULES
+    used = set()
+    parts = []
+    for dim, name in enumerate(logical):
+        axes = tuple(a for a in rules.get(name, ()) if a in mesh.shape
+                     and a not in used)
+        if axes and shape[dim] % _axes_size(mesh, axes) == 0:
+            parts.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def params_pspecs(specs_tree, shapes_tree, mesh: Mesh, rules=None):
+    """Map a (specs, shapes) pytree pair to PartitionSpecs.
+
+    ``specs_tree`` leaves are logical-axis tuples; ``shapes_tree`` leaves are
+    ShapeDtypeStructs (or arrays) with matching structure.
+    """
+    flat_specs, treedef = jax.tree.flatten(
+        specs_tree, is_leaf=lambda x: isinstance(x, tuple))
+    flat_shapes = treedef.flatten_up_to(shapes_tree)
+    out = [spec_for_logical(sp, np.shape(sh) if not hasattr(sh, "shape")
+                            else sh.shape, mesh, rules)
+           for sp, sh in zip(flat_specs, flat_shapes)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def params_shardings(specs_tree, shapes_tree, mesh: Mesh, rules=None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        params_pspecs(specs_tree, shapes_tree, mesh, rules),
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,82 @@
+"""Activation / batch / cache PartitionSpec builders.
+
+The paper's throughput discipline as mesh policy: every *population* axis
+(training batch, decode request batch, tracker stream axis) shards over
+``(pod, data)`` with zero cross-member collectives; model internals shard
+over ``model``.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(n: int, mesh: Mesh, axes: tuple) -> bool:
+    return n % int(np.prod([mesh.shape[a] for a in axes], initial=1)) == 0
+
+
+def batch_spec(shape: tuple, mesh: Mesh) -> P:
+    """Shard dim 0 (batch/stream axis) over (pod, data) when divisible."""
+    dp = dp_axes(mesh)
+    if shape and _div(shape[0], mesh, dp):
+        return P(dp if len(dp) > 1 else dp[0], *([None] * (len(shape) - 1)))
+    # fall back: try data alone, else replicate
+    if shape and "data" in mesh.shape and _div(shape[0], mesh, ("data",)):
+        return P("data", *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_pspecs(batch_tree, mesh: Mesh):
+    import jax
+    return jax.tree.map(lambda x: batch_spec(x.shape, mesh), batch_tree)
+
+
+def cache_spec(shape: tuple, mesh: Mesh) -> P:
+    """KV/SSM cache: batch dim 0 over (pod, data); if batch=1 (long-context)
+    shard the sequence dim over data; head-like dims over model when they
+    divide."""
+    dims = [None] * len(shape)
+    dp = dp_axes(mesh)
+    used_data = False
+    if shape and shape[0] > 1 and _div(shape[0], mesh, dp):
+        dims[0] = dp if len(dp) > 1 else dp[0]
+        used_data = True
+    elif shape and shape[0] > 1 and "data" in mesh.shape \
+            and _div(shape[0], mesh, ("data",)):
+        dims[0] = "data"
+        used_data = True
+    if not used_data and len(shape) >= 2 and "data" in mesh.shape \
+            and shape[1] % mesh.shape["data"] == 0 and shape[1] >= 1024:
+        dims[1] = "data"  # long-context: shard cache sequence
+    # shard one more dim over model if a head/width-like dim divides
+    if "model" in mesh.shape:
+        for d in range(len(shape) - 1, 0, -1):
+            if dims[d] is None and shape[d] % mesh.shape["model"] == 0 \
+                    and shape[d] >= mesh.shape["model"]:
+                dims[d] = "model"
+                break
+    return P(*dims)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, has_layer_dim: bool = True):
+    """Specs for a stacked cache pytree (leaves [L, B, ...] or [B, ...])."""
+    import jax
+
+    def leaf(x):
+        shape = x.shape
+        if has_layer_dim and len(shape) >= 2:
+            inner = cache_spec(shape[1:], mesh)
+            return P(None, *inner)
+        return cache_spec(shape, mesh)
+
+    return jax.tree.map(leaf, cache_tree)
+
+
+def named(tree_pspecs, mesh: Mesh):
+    import jax
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+from .optimizer import AdamWConfig, adamw, cosine_schedule  # noqa: F401
+from .train_step import TrainState, make_train_step  # noqa: F401
+from .serve_step import make_decode_step, make_prefill  # noqa: F401

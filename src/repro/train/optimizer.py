@@ -1,0 +1,103 @@
+"""AdamW + schedules + global-norm clipping — pure JAX, no optax.
+
+State layout mirrors the param tree (``m``/``v`` per leaf in f32); the
+sharding of optimizer state follows the param PartitionSpecs 1:1, so FSDP
+shards the moments exactly like the weights (ZeRO style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    count: jnp.ndarray
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                     0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+        return cfg.lr * warm * frac
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw(cfg: AdamWConfig):
+    """Returns (init_fn, update_fn)."""
+    schedule = cosine_schedule(cfg)
+
+    def init(params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(m=jax.tree.map(zeros, params),
+                        v=jax.tree.map(zeros, params),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: OptState, params):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        count = state.count + 1
+        b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+        lr = schedule(count)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = cfg.b1 * m + (1 - cfg.b1) * g
+            v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mhat = m2 / b1c
+            vhat = v2 / b2c
+            step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if p.ndim >= 2:  # decay matrices only (norm/bias exempt)
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), m2, v2
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return updates, OptState(new_m, new_v, count), \
+            {"grad_norm": gnorm, "lr": lr}
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,120 @@
+"""Serving steps: prefill + single-token decode, and a continuous-batching
+driver built on the same slot pool as the SORT trackers.
+
+The decode request batch is the "stream axis" of the paper: requests are
+independent, shard over ``(pod, data)``, and the only state carried between
+steps is per-slot (KV cache / SSM state) — exactly a tracker's Kalman state.
+``ServeLoop`` reuses :mod:`repro.core.slots` for admission/eviction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import slots as slot_lib
+
+
+def make_prefill(model, par, cache_len: int):
+    def prefill(params, batch):
+        return model.prefill(params, batch, par, cache_len)
+    return prefill
+
+
+def make_decode_step(model, par, sample: str = "greedy"):
+    """One decode step for the whole request batch: logits -> next token."""
+    def step(params, token, pos, caches, rng=None):
+        logits, caches = model.decode(params, token, pos, caches, par)
+        logits = logits[:, -1]
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, logits).astype(jnp.int32)
+        return nxt[:, None], pos + 1, caches
+    return step
+
+
+@dataclasses.dataclass
+class ServeLoop:
+    """Continuous batching: fixed decode slots, immediate backfill on EOS.
+
+    Host-side driver (python loop) around the jitted decode step — mirrors
+    the paper's throughput scaling: the device step is always dense over
+    ``num_slots`` lanes; lifecycle churn happens in the slot pool.
+    """
+    model: Any
+    params: Any
+    par: Any
+    num_slots: int
+    cache_len: int
+    eos_id: int = 1
+
+    def __post_init__(self):
+        self.pool = slot_lib.init_pool((), self.num_slots)
+        self.caches = self.model.init_caches(self.params, self.num_slots,
+                                             self.cache_len)
+        self.token = jnp.zeros((self.num_slots, 1), jnp.int32)
+        self.pos = jnp.zeros((self.num_slots,), jnp.int32)
+        self._step = jax.jit(make_decode_step(self.model, self.par))
+        self.outputs: dict[int, list] = {}
+        self._queue: list[list[int]] = []
+
+    def submit(self, prompt_tokens: list[int]):
+        self._queue.append(prompt_tokens)
+
+    def _admit(self):
+        while self._queue:
+            free = ~self.pool.alive
+            want = jnp.zeros((len(free),), bool).at[0].set(True)
+            slot_for = slot_lib.assign_slots(free, want)
+            s = int(slot_for[0])
+            if s < 0:
+                return  # no free slot: natural back-pressure
+            prompt = self._queue.pop(0)
+            self.pool = slot_lib.birth(self.pool, slot_for)
+            uid = int(self.pool.uid[s])
+            # single-sequence prefill into this slot's cache rows
+            pf = make_prefill(self.model, self.par, self.cache_len)
+            logits, cache1 = pf(self.params,
+                                {"tokens": jnp.asarray([prompt], jnp.int32)})
+            self.caches = jax.tree.map(
+                lambda c, c1: _write_slot(c, c1, s), self.caches, cache1)
+            self.token = self.token.at[s, 0].set(
+                int(jnp.argmax(logits[0, -1])))
+            self.pos = self.pos.at[s].set(len(prompt))
+            self.outputs[uid] = [int(self.token[s, 0])]
+
+    def step(self):
+        """One dense decode step over all slots; evict finished sequences."""
+        self._admit()
+        self.token, self.pos, self.caches = self._step(
+            self.params, self.token, self.pos, self.caches)
+        alive = self.pool.alive
+        for s in range(self.num_slots):
+            if bool(alive[s]):
+                uid = int(self.pool.uid[s])
+                t = int(self.token[s, 0])
+                self.outputs.setdefault(uid, []).append(t)
+        done = alive & ((self.token[:, 0] == self.eos_id)
+                        | (self.pos >= self.cache_len - 1))
+        self.pool = slot_lib.tick(self.pool, alive & ~done, max_age=0)
+        return {int(self.pool.uid[s]): self.outputs.get(int(self.pool.uid[s]))
+                for s in range(self.num_slots) if bool(alive[s])}
+
+
+def _write_slot(cache_all, cache_one, s: int):
+    """Copy a single-sequence cache into slot ``s`` of the batched cache.
+
+    Handles both stacked ([L, B, ...]) and unstacked ([B, ...]) leaves by
+    matching rank: cache_one's batch dim is 1 where cache_all's is B.
+    """
+    for axis in range(cache_all.ndim):
+        if (cache_one.shape[axis] == 1 and cache_all.shape[axis] != 1
+                and cache_all.shape[:axis] == cache_one.shape[:axis]):
+            idx = [slice(None)] * cache_all.ndim
+            idx[axis] = s
+            src = jnp.squeeze(cache_one, axis=axis)
+            return cache_all.at[tuple(idx)].set(src.astype(cache_all.dtype))
+    return cache_all

@@ -1,0 +1,13 @@
+import os
+
+# Tests run single-device (the dry-run owns the 512-device configuration);
+# multi-device integration tests spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,91 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and finiteness (per spec)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models.model import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_state, make_train_step
+from repro.models.transformer import Parallel
+
+
+def _smoke_batch(cfg, rng, b=2, l=16):
+    if cfg.modality == "audio":
+        return {"feats": jnp.asarray(rng.normal(size=(b, l, cfg.d_model))
+                                     .astype(np.float32)),
+                "mask_spans": jnp.asarray(rng.random((b, l)) < 0.2),
+                "labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                   (b, l)), dtype=jnp.int32),
+                "loss_mask": jnp.ones((b, l), jnp.float32)}
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, l)),
+                                   dtype=jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, l)),
+                                   dtype=jnp.int32)}
+    if cfg.modality == "vision":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_patches, cfg.frontend_dim))
+            .astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = registry.get_smoke(arch)
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = _smoke_batch(cfg, rng)
+
+    logits = jax.jit(model.forward)(params, batch)
+    exp_len = 16 + (cfg.num_patches if cfg.modality == "vision" else 0)
+    assert logits.shape == (2, exp_len, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    step = jax.jit(make_train_step(model, Parallel.local(),
+                                   AdamWConfig(lr=1e-3, warmup_steps=1,
+                                               total_steps=10)))
+    state = init_state(params, AdamWConfig())
+    state, m = step(state, batch)
+    assert bool(jnp.isfinite(m["loss"])), f"{arch}: non-finite loss"
+    assert bool(jnp.isfinite(m["grad_norm"])), f"{arch}: non-finite grads"
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """Guard the published numbers (layer count, width, heads, vocab)."""
+    cfg = registry.get_arch(arch)
+    expected = {
+        "qwen1_5_0_5b": (24, 1024, 16, 151936),
+        "qwen2_7b": (28, 3584, 28, 152064),
+        "minicpm3_4b": (62, 2560, 40, 73448),
+        "qwen2_5_14b": (48, 5120, 40, 152064),
+        "deepseek_v2_236b": (60, 5120, 128, 102400),
+        "deepseek_v2_lite_16b": (27, 2048, 16, 102400),
+        "hubert_xlarge": (48, 1280, 16, 504),
+        "mamba2_2_7b": (64, 2560, 0, 50280),
+        "llava_next_mistral_7b": (32, 4096, 32, 32000),
+        "hymba_1_5b": (32, 1600, 25, 32001),
+    }[arch]
+    assert (cfg.num_layers, cfg.d_model, cfg.n_heads,
+            cfg.vocab_size) == expected
+
+
+def test_deepseek_moe_structure():
+    cfg = registry.get_arch("deepseek_v2_236b")
+    assert cfg.moe and cfg.n_routed_experts == 160
+    assert cfg.n_shared_experts == 2 and cfg.moe_top_k == 6
+    assert cfg.first_k_dense == 1 and cfg.kv_lora_rank == 512
+
+
+def test_param_counts_in_range():
+    """Analytic parameter counts should land near the advertised sizes."""
+    targets = {"qwen2_7b": 7.6e9, "qwen2_5_14b": 14.8e9,
+               "deepseek_v2_236b": 236e9, "mamba2_2_7b": 2.7e9,
+               "llava_next_mistral_7b": 7.2e9}
+    for arch, t in targets.items():
+        n = registry.get_arch(arch).num_params()
+        assert abs(n - t) / t < 0.08, (arch, n, t)

@@ -1,0 +1,75 @@
+"""Checkpointing: roundtrip, atomic commit, retention, async writer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"layer": {"w": jax.random.normal(k, (4, 8)),
+                      "b": jnp.zeros((8,))},
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 7, t)
+    like = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), t)
+    restored, step = ck.restore(str(tmp_path), like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_pointer_and_multiple_steps(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    ck.save(str(tmp_path), 2, jax.tree.map(lambda x: x + 1, t))
+    assert ck.latest_step(str(tmp_path)) == 2
+    restored, step = ck.restore(str(tmp_path), t)
+    assert step == 2
+    restored, step = ck.restore(str(tmp_path), t, step=1)
+    assert step == 1
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ck.save(str(tmp_path), 1, _tree())
+    bad = {"layer": {"w": np.zeros((5, 8)), "b": np.zeros(8)},
+           "step": np.zeros((), np.int32)}
+    with pytest.raises(AssertionError):
+        ck.restore(str(tmp_path), bad)
+
+
+def test_no_partial_commit(tmp_path):
+    """A crash before LATEST is written must leave no visible checkpoint."""
+    assert ck.latest_step(str(tmp_path)) is None
+    # simulate: directory exists but LATEST never committed
+    os.makedirs(tmp_path / "step_000000009")
+    assert ck.latest_step(str(tmp_path)) is None
+    with pytest.raises(FileNotFoundError):
+        ck.restore(str(tmp_path), _tree())
+
+
+def test_manager_async_and_gc(tmp_path):
+    mgr = ck.CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, t)
+    mgr.wait()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2 and steps[-1].endswith("4")
+    assert ck.latest_step(str(tmp_path)) == 4
+
+
+def test_restore_respects_dtype_and_structure(tmp_path):
+    t = {"a": jnp.asarray([1, 2], jnp.int32),
+         "nested": [jnp.ones((2, 2), jnp.bfloat16)]}
+    ck.save(str(tmp_path), 1, t)
+    restored, _ = ck.restore(str(tmp_path), t)
+    assert restored["a"].dtype == np.int32
+    assert np.asarray(restored["nested"][0]).dtype == jnp.bfloat16

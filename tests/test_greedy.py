@@ -1,0 +1,53 @@
+"""Greedy associator: matching validity + relation to Hungarian optimum."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.greedy import greedy_assign
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 8))
+def test_greedy_is_valid_matching(seed, d, t):
+    rng = np.random.default_rng(seed)
+    iou = jnp.asarray(rng.random((d, t)).astype(np.float32))
+    dm = jnp.asarray(rng.random(d) < 0.8)
+    tm = jnp.asarray(rng.random(t) < 0.8)
+    out = np.asarray(greedy_assign(iou, dm, tm, 0.3))
+    matched = out[out >= 0]
+    assert len(set(matched.tolist())) == len(matched)  # injective
+    for i, j in enumerate(out):
+        if j >= 0:
+            assert bool(dm[i]) and bool(tm[j])
+            assert float(iou[i, j]) >= 0.3
+
+
+def test_greedy_picks_best_first():
+    iou = jnp.asarray([[0.9, 0.8], [0.85, 0.1]], jnp.float32)
+    out = np.asarray(greedy_assign(iou, jnp.ones(2, bool),
+                                   jnp.ones(2, bool), 0.3))
+    # greedy: (0,0)=0.9 first, then (1,?) only 0.1 left -> unmatched
+    # (hungarian would pick (0,1)+(1,0) = 1.65 total)
+    assert out[0] == 0 and out[1] == -1
+
+
+def test_greedy_matches_hungarian_on_unambiguous():
+    rng = np.random.default_rng(0)
+    from repro.core import association
+    for _ in range(10):
+        # well-separated diagonal-dominant IoU: both solvers must agree
+        base = np.eye(6) * 0.9 + rng.random((6, 6)) * 0.05
+        iou = jnp.asarray(base.astype(np.float32))
+        g = np.asarray(greedy_assign(iou, jnp.ones(6, bool),
+                                     jnp.ones(6, bool), 0.3))
+        np.testing.assert_array_equal(g, np.arange(6))
+
+
+def test_greedy_batched():
+    rng = np.random.default_rng(1)
+    iou = jnp.asarray(rng.random((4, 5, 5)).astype(np.float32))
+    out = np.asarray(greedy_assign(iou, jnp.ones((4, 5), bool),
+                                   jnp.ones((4, 5), bool), 0.0))
+    for b in range(4):
+        m = out[b][out[b] >= 0]
+        assert len(set(m.tolist())) == len(m)

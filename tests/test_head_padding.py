@@ -1,0 +1,64 @@
+"""head_pad_factor exactness: the padded model computes the SAME function.
+
+x-factor padding preserves the GQA grouping ``i // g``; the padded block is
+zero-initialized and the o-proj rows of padded heads are zero, so forward,
+prefill and decode outputs must match the unpadded model bit-for-bit (fp32).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.models.transformer import Parallel
+
+
+def _graft(t0, t2):
+    """Copy real-head weights into the padded param tree (pad stays zero)."""
+    if isinstance(t0, dict):
+        return {k: _graft(t0[k], t2[k]) for k in t0}
+    if isinstance(t0, list):
+        return [_graft(a, b) for a, b in zip(t0, t2)]
+    if t0.shape == t2.shape:
+        return t0
+    z = jnp.zeros_like(t2)
+    return z.at[tuple(slice(0, s) for s in t0.shape)].set(t0)
+
+
+def test_padded_model_is_identical():
+    cfg0 = ModelConfig(num_layers=2, d_model=64, n_heads=5, n_kv_heads=1,
+                       head_dim=8, d_ff=128, vocab_size=100, max_seq_len=64,
+                       dtype="float32", qkv_bias=True)
+    cfg2 = dataclasses.replace(cfg0, head_pad_factor=2)
+    m0, m2 = build_model(cfg0), build_model(cfg2)
+    p0, _ = m0.init(jax.random.PRNGKey(0))
+    p2, _ = m2.init(jax.random.PRNGKey(0))
+    p2 = _graft(p0, p2)
+    batch = {"tokens": (jnp.arange(32).reshape(2, 16) * 7) % 100}
+
+    f0 = m0.forward(p0, batch)
+    f2 = m2.forward(p2, batch)
+    np.testing.assert_array_equal(np.asarray(f0), np.asarray(f2))
+
+    lg0, c0 = m0.prefill(p0, batch, Parallel(), 32)
+    lg2, c2 = m2.prefill(p2, batch, Parallel(), 32)
+    np.testing.assert_array_equal(np.asarray(lg0), np.asarray(lg2))
+    # cache stores only real kv heads in both models
+    leaf0 = jax.tree.leaves(c0)[0]
+    leaf2 = jax.tree.leaves(c2)[0]
+    assert leaf0.shape == leaf2.shape
+
+    for t in (16, 17):
+        tok = batch["tokens"][:, :1]
+        d0, c0 = m0.decode(p0, tok, jnp.full((2,), t, jnp.int32), c0)
+        d2, c2 = m2.decode(p2, tok, jnp.full((2,), t, jnp.int32), c2)
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d2))
+
+
+def test_grouping_preserved():
+    """x2 padding keeps g = n_heads / n_kv_heads, so head i -> kv i//g."""
+    cfg = ModelConfig(n_heads=40, n_kv_heads=8, head_pad_factor=2)
+    assert cfg.eff_n_heads == 80 and cfg.eff_n_kv_heads == 16
+    assert cfg.eff_n_heads // cfg.eff_n_kv_heads == cfg.n_heads // cfg.n_kv_heads

@@ -1,0 +1,93 @@
+"""Hungarian solver vs scipy — exact optimal cost on every instance."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linear_sum_assignment
+
+from repro.core import hungarian
+
+
+def _total(cost, col4row, c_valid):
+    total, cnt = 0.0, 0
+    for i in range(cost.shape[0]):
+        j = int(col4row[i])
+        if j < c_valid:
+            total += cost[i, j]
+            cnt += 1
+    return total, cnt
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 10), st.integers(0, 2**31 - 1),
+       st.sampled_from([0.01, 1.0, 100.0]))
+def test_square_matches_scipy(n, seed, scale):
+    rng = np.random.default_rng(seed)
+    cost = (rng.normal(size=(n, n)) * scale).astype(np.float32)
+    col4row = np.asarray(hungarian.solve(jnp.asarray(cost)))
+    assert sorted(col4row.tolist()) == list(range(n)), "not a permutation"
+    ours = cost[np.arange(n), col4row].sum()
+    ri, ci = linear_sum_assignment(cost)
+    np.testing.assert_allclose(ours, cost[ri, ci].sum(), rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_rectangular_masked(r, c, seed):
+    rng = np.random.default_rng(seed)
+    n = max(r, c) + int(rng.integers(0, 4))
+    cost = rng.normal(size=(r, c)).astype(np.float32)
+    col4row = np.asarray(hungarian.solve_masked(
+        jnp.asarray(cost), jnp.ones(r, bool), jnp.ones(c, bool), n))
+    total, cnt = _total(cost, col4row, c)
+    ri, ci = linear_sum_assignment(cost)
+    assert cnt == min(r, c)
+    np.testing.assert_allclose(total, cost[ri, ci].sum(), rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_partial_masks(seed):
+    rng = np.random.default_rng(seed)
+    n = 10
+    cost = rng.normal(size=(n, n)).astype(np.float32)
+    rm = rng.random(n) < 0.7
+    cm = rng.random(n) < 0.7
+    if rm.sum() == 0 or cm.sum() == 0:
+        return
+    col4row = np.asarray(hungarian.solve_masked(
+        jnp.asarray(cost), jnp.asarray(rm), jnp.asarray(cm), n))
+    sub = cost[np.ix_(rm, cm)]
+    ri, ci = linear_sum_assignment(sub)
+    rows, cols = np.where(rm)[0], set(np.where(cm)[0].tolist())
+    total = sum(cost[i, col4row[i]] for i in rows if col4row[i] in cols)
+    cnt = sum(1 for i in rows if col4row[i] in cols)
+    assert cnt == min(rm.sum(), cm.sum())
+    np.testing.assert_allclose(total, sub[ri, ci].sum(), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_batched_vmap():
+    rng = np.random.default_rng(3)
+    cost = rng.normal(size=(5, 7, 7)).astype(np.float32)
+    out = np.asarray(hungarian.solve_batched(jnp.asarray(cost)))
+    for b in range(5):
+        ri, ci = linear_sum_assignment(cost[b])
+        ours = cost[b][np.arange(7), out[b]].sum()
+        np.testing.assert_allclose(ours, cost[b][ri, ci].sum(), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_ties_still_optimal():
+    cost = np.zeros((4, 4), np.float32)  # fully degenerate
+    col4row = np.asarray(hungarian.solve(jnp.asarray(cost)))
+    assert sorted(col4row.tolist()) == [0, 1, 2, 3]
+
+
+@pytest.mark.parametrize("n", [1, 2, 13, 16])
+def test_identity_cost(n):
+    cost = (1.0 - np.eye(n)).astype(np.float32)
+    col4row = np.asarray(hungarian.solve(jnp.asarray(cost)))
+    np.testing.assert_array_equal(col4row, np.arange(n))

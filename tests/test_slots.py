@@ -1,0 +1,70 @@
+"""Slot-pool lifecycle invariants (shared by trackers and serving)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import slots
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 16), st.integers(0, 16))
+def test_assign_slots_valid_matching(seed, t, d):
+    rng = np.random.default_rng(seed)
+    free = jnp.asarray(rng.random(t) < 0.5)
+    want = jnp.asarray(rng.random(max(d, 1)) < 0.5)
+    slot_for = np.asarray(slots.assign_slots(free, want))
+    claimed = slot_for[slot_for >= 0]
+    # distinct slots, all actually free, count = min(#want, #free)
+    assert len(set(claimed.tolist())) == len(claimed)
+    assert all(bool(free[s]) for s in claimed)
+    assert len(claimed) == min(int(np.asarray(want).sum()),
+                               int(np.asarray(free).sum()))
+    # non-wanting claimants get -1
+    for i, w in enumerate(np.asarray(want)):
+        if not w:
+            assert slot_for[i] == -1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_lifecycle_birth_tick_kill(seed):
+    rng = np.random.default_rng(seed)
+    pool = slots.init_pool((), 8)
+    uids_seen = set()
+    for step in range(20):
+        want = jnp.asarray(rng.random(4) < 0.4)
+        slot_for = slots.assign_slots(~pool.alive, want)
+        pool = slots.birth(pool, slot_for)
+        alive = np.asarray(pool.alive)
+        uid = np.asarray(pool.uid)
+        # uids unique among alive
+        live_uids = uid[alive].tolist()
+        assert len(set(live_uids)) == len(live_uids)
+        uids_seen.update(live_uids)
+        matched = jnp.asarray(rng.random(8) < 0.6) & pool.alive
+        pool = slots.tick(pool, matched, max_age=1)
+        tsu = np.asarray(pool.time_since_update)
+        assert (tsu[np.asarray(pool.alive)] <= 1).all()
+        assert (np.asarray(pool.uid)[~np.asarray(pool.alive)] == -1).all()
+    assert len(uids_seen) >= 1
+
+
+def test_uid_monotonicity():
+    pool = slots.init_pool((), 4)
+    slot_for = slots.assign_slots(~pool.alive, jnp.asarray([True, True]))
+    pool = slots.birth(pool, slot_for)
+    first = sorted(np.asarray(pool.uid)[np.asarray(pool.alive)].tolist())
+    assert first == [1, 2]
+    pool = slots.tick(pool, jnp.zeros(4, bool), max_age=0)  # kill all
+    slot_for = slots.assign_slots(~pool.alive, jnp.asarray([True]))
+    pool = slots.birth(pool, slot_for)
+    assert sorted(np.asarray(pool.uid)[np.asarray(pool.alive)].tolist()) == [3]
+
+
+def test_overflow_drops_claims():
+    pool = slots.init_pool((), 2)
+    slot_for = slots.assign_slots(~pool.alive,
+                                  jnp.asarray([True, True, True, True]))
+    assert (np.asarray(slot_for) >= 0).sum() == 2
+    pool = slots.birth(pool, slot_for)
+    assert int(pool.num_alive) == 2

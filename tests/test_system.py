@@ -1,0 +1,103 @@
+"""End-to-end system behaviour: the paper's workload on the full stack,
+plus multi-device integration (subprocess: device count is fixed at jax
+init, so sharded tests get their own interpreter)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SortConfig, SortEngine, metrics
+from repro.data import stream, synthetic
+
+
+def test_sort_service_full_pipeline():
+    """Paper Algorithm 1 over a packed multi-stream batch, with metrics."""
+    seqs = []
+    gts = []
+    for i in range(4):
+        cfg = synthetic.SceneConfig(num_frames=60, max_objects=6, seed=20 + i,
+                                    miss_rate=0.03, fp_rate=0.05)
+        gt_boxes, gt_mask, db, dm = synthetic.generate_scene(cfg)
+        seqs.append((f"cam{i}", db, dm))
+        gts.append((gt_boxes, gt_mask))
+    batch = stream.pack(seqs, pad_multiple=4)
+    eng = SortEngine(SortConfig(max_trackers=16,
+                                max_detections=batch.det_boxes.shape[2]))
+    state = eng.init(batch.det_boxes.shape[1])
+    _, out = jax.jit(eng.run)(state, jnp.asarray(batch.det_boxes),
+                              jnp.asarray(batch.det_mask))
+    for i, (gt_boxes, gt_mask) in enumerate(gts):
+        f = gt_boxes.shape[0]
+        m = metrics.mota(gt_boxes, gt_mask,
+                         np.asarray(out.boxes[:f, i]),
+                         np.asarray(out.uid[:f, i]),
+                         np.asarray(out.emit[:f, i]))
+        assert m["mota"] > 0.4, (i, m)
+
+
+MULTIDEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    from repro.models.config import ModelConfig
+    from repro.models.model import build_model
+    from repro.models.transformer import Parallel
+    from repro.sharding.rules import params_pspecs
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_step import init_state, make_train_step
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    cfg = ModelConfig(num_layers=2, d_model=32, n_heads=4, n_kv_heads=4,
+                      d_ff=64, vocab_size=128, max_seq_len=32,
+                      dtype="float32", moe=True, n_routed_experts=8,
+                      n_shared_experts=1, moe_top_k=2, moe_d_ff=16,
+                      first_k_dense=1, moe_capacity_factor=8.0)
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    par_l = Parallel.local()
+    par_m = Parallel(mesh=mesh, dp_axes=("data",), tp_axis="model")
+    batch = {"tokens": jnp.ones((4, 16), jnp.int32),
+             "labels": jnp.ones((4, 16), jnp.int32)}
+    # sharded loss == local loss
+    pspecs = params_pspecs(specs, params, mesh)
+    shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+    params_sh = jax.device_put(params, shard)
+    l_local = float(model.loss(params, batch, par_l))
+    l_shard = float(jax.jit(lambda p, b: model.loss(p, b, par_m))(params_sh,
+                                                                  batch))
+    assert abs(l_local - l_shard) < 5e-3, (l_local, l_shard)
+    # one sharded train step runs and stays finite
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step = jax.jit(make_train_step(model, par_m, opt))
+    state = jax.device_put(init_state(params, opt),
+                           type(init_state(params, opt))(
+                               shard,
+                               type(init_state(params, opt).opt_state)(
+                                   shard, shard,
+                                   NamedSharding(mesh, P())),
+                               NamedSharding(mesh, P())))
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    print(json.dumps({"ok": True, "l_local": l_local, "l_shard": l_shard}))
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_sharded_equals_local():
+    r = subprocess.run([sys.executable, "-c", MULTIDEV], capture_output=True,
+                       text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"]
