@@ -1,0 +1,30 @@
+"""Version-compat shims so the repo runs on every supported jax.
+
+The sharded training/MoE paths target the modern ``jax.shard_map`` API
+(``check_vma`` / ``axis_names``); older jax only has
+``jax.experimental.shard_map.shard_map`` (``check_rep`` / ``auto``).
+This module maps one onto the other:
+
+* ``axis_names={...}``  (manual axes, new API)  ->  ``auto = mesh axes -
+  axis_names`` (old API names the *automatic* complement instead).
+* ``check_vma``  ->  ``check_rep`` (same replication check, renamed).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    if hasattr(jax, "shard_map"):
+        kwargs = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

@@ -4,4 +4,5 @@ Kalman filter (tiny-matrix batched), Hungarian assignment (lax), IoU
 association, slot-pool lifecycle, and the batched SortEngine.
 """
 from . import association, bbox, hungarian, kalman, metrics, slots  # noqa: F401
-from .sort import SortConfig, SortEngine, SortOutput, SortState  # noqa: F401
+from .sort import (LaneSortState, SortConfig, SortEngine,  # noqa: F401
+                   SortOutput, SortState, lane_state_of, sort_state_of)

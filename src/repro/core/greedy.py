@@ -52,6 +52,46 @@ def greedy_assign(iou: jnp.ndarray, det_mask: jnp.ndarray,
     return out
 
 
+def greedy_assign_lane(iou: jnp.ndarray, det_mask: jnp.ndarray,
+                       trk_mask: jnp.ndarray, iou_threshold: float = 0.3):
+    """Lane-layout port of :func:`greedy_assign` (DESIGN.md §2).
+
+    Batch on the *trailing* axes so the per-round masked argmax runs once
+    over the whole lane block: ``iou [D, T, ...]``, ``det_mask [D, ...]``,
+    ``trk_mask [T, ...]`` (bool or 0/1 float).  Returns
+    ``(trk_to_det [T, ...] int32, matched_det [D, ...] bool)`` — the
+    inverted form the SORT update consumes, matching what
+    :func:`greedy_assign` + scatter-inversion produce (same flat row-major
+    ``d*T + t`` argmax order, so tie-breaking is identical).
+
+    The round loop is a trace-time-unrolled ``min(D, T)`` iterations of
+    pure elementwise/reduce ops, so it is legal inside a Pallas kernel
+    body (see ``repro.kernels.frame``).
+    """
+    d, t = iou.shape[0], iou.shape[1]
+    lanes = iou.shape[2:]
+    valid = ((det_mask[:, None] > 0) & (trk_mask[None, :] > 0)
+             & (iou >= iou_threshold))
+    score = jnp.where(valid, iou, -1.0)
+    trk_to_det = jnp.full((t,) + lanes, -1, jnp.int32)
+    matched_det = jnp.zeros((d,) + lanes, bool)
+    di_iota = jnp.arange(d, dtype=jnp.int32).reshape((d,) + (1,) * len(lanes))
+    ti_iota = jnp.arange(t, dtype=jnp.int32).reshape((t,) + (1,) * len(lanes))
+
+    for _ in range(min(d, t)):
+        flat = score.reshape((d * t,) + lanes)
+        idx = jnp.argmax(flat, axis=0).astype(jnp.int32)     # [...]
+        best = jnp.max(flat, axis=0)
+        ok = best > 0.0
+        di, ti = idx // t, idx % t
+        hit_trk = (ti_iota == ti[None]) & ok[None]           # [T, ...]
+        hit_det = (di_iota == di[None]) & ok[None]           # [D, ...]
+        trk_to_det = jnp.where(hit_trk, di[None], trk_to_det)
+        matched_det = matched_det | hit_det
+        score = jnp.where(hit_det[:, None] | hit_trk[None, :], -1.0, score)
+    return trk_to_det, matched_det
+
+
 def _set_at(buf, idx, val):
     """Batched ``buf[..., idx] = val`` with an overflow slot."""
     d = buf.shape[-1]

@@ -124,11 +124,45 @@ def birth(pool: SlotPool, slot_for: jnp.ndarray) -> SlotPool:
     )
 
 
+def transpose_pool(pool: SlotPool) -> SlotPool:
+    """Swap the slot axis between last (engine layout ``[..., T]``) and
+    first (lane layout ``[T, ...]``, slots on sublanes, streams on lanes).
+
+    Involution: ``transpose_pool(transpose_pool(p)) == p``.  Lane-layout
+    pools are what ``core.sort.LaneSortState`` keeps resident; the
+    per-slot fields are small ints, so the occasional transpose to reuse
+    :func:`assign_slots`/:func:`birth` is off the covariance hot path.
+    ``next_uid`` carries no slot axis and passes through.
+    """
+    return pool._replace(
+        **{f: jnp.moveaxis(getattr(pool, f), -1, 0)
+           for f in ("alive", "age", "hits", "hit_streak",
+                     "time_since_update", "uid")})
+
+
+def assign_slots_lane(free_mask: jnp.ndarray, want_mask: jnp.ndarray) -> jnp.ndarray:
+    """:func:`assign_slots` for lane layout: ``free [T, ...]``,
+    ``want [D, ...]`` -> ``slot_for [D, ...]``."""
+    out = assign_slots(jnp.moveaxis(free_mask, 0, -1),
+                       jnp.moveaxis(want_mask, 0, -1))
+    return jnp.moveaxis(out, -1, 0)
+
+
+def birth_lane(pool: SlotPool, slot_for: jnp.ndarray) -> SlotPool:
+    """:func:`birth` for a lane-layout pool (fields ``[T, ...]``,
+    ``slot_for [D, ...]``)."""
+    born = birth(transpose_pool(pool), jnp.moveaxis(slot_for, 0, -1))
+    return transpose_pool(born)
+
+
 def tick(pool: SlotPool, matched: jnp.ndarray, max_age: int) -> SlotPool:
     """Advance one step: matched slots refresh, unmatched age out.
 
     ``matched [..., T]``: alive slots updated this step.  Slots whose
     ``time_since_update`` exceeds ``max_age`` die.
+
+    Purely elementwise, so it works unchanged on lane-layout pools
+    (fields ``[T, ...]`` with ``matched [T, ...]``).
     """
     alive = pool.alive
     hit = alive & matched

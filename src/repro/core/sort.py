@@ -15,6 +15,15 @@ Per frame (paper Fig. 2):
 
 Lifecycle constants follow Bewley's reference implementation
 (max_age=1, min_hits=3, iou_threshold=0.3).
+
+Two execution paths (selected by ``SortConfig.use_kernels``):
+
+* ``False`` — legacy per-phase path: engine-layout state
+  (``[S, T, ...]``), Hungarian association, injectable per-phase kernels.
+* ``True`` — lane-persistent fused path: state is converted once per
+  ``run()`` to :class:`LaneSortState` (the Pallas kernels' lane layout,
+  DESIGN.md §2.2) and every frame is a single fused
+  predict/IoU/greedy/update dispatch (``repro.kernels.frame``).
 """
 from __future__ import annotations
 
@@ -35,8 +44,16 @@ class SortConfig:
     max_age: int = 1
     min_hits: int = 3
     dtype: str = "float32"
-    # kernel injection (None -> pure-jnp reference path). Set by repro.kernels.ops.
+    # True -> lane-persistent fused frame path: state stays in the kernels'
+    # lane layout across the whole run and every frame is one fused
+    # predict/IoU/greedy/update dispatch (repro.kernels.frame).  Greedy
+    # association only; for Hungarian keep False (optionally with injected
+    # per-phase kernel fns from repro.kernels.ops.engine_fns).
     use_kernels: bool = False
+    # tracker-lane block for the fused path; streams per kernel block is
+    # block_b // max_trackers (DESIGN.md §2.3) — the default gives a full
+    # 128-lane stream block at T=16, matching the TPU lane tile.
+    block_b: int = 2048
 
 
 class SortState(NamedTuple):
@@ -44,6 +61,80 @@ class SortState(NamedTuple):
     p: jnp.ndarray        # [S, T, 7, 7] covariances
     pool: slots.SlotPool  # [S, T] lifecycle
     frame_count: jnp.ndarray  # [S] int32
+
+
+class LaneSortState(NamedTuple):
+    """Persistent lane-layout engine state (DESIGN.md §2.2).
+
+    The tracker batch ``B = T * S_pad`` lives on the TPU lane dimension,
+    **tracker-slot major**: lane ``b = t * S_pad + s``, so
+    ``x.reshape(7, T, S_pad)`` is a free (row-major) view with streams on
+    lanes — exactly the fused frame kernel's operand layout.  ``S_pad`` is
+    the stream count padded to the kernel's stream block; padded streams
+    carry ``alive=False`` and an identity-friendly covariance so every
+    lane stays finite through predict/update.
+
+    ``pool`` fields are lane-major ``[T, S_pad]`` (``slots.transpose_pool``
+    of the engine layout); ``frame_count [S_pad]``.
+
+    Unlike :class:`SortState`, which round-trips ``[S, T, 7, 7]`` through
+    reshape+pad+transpose around every kernel dispatch, this state is
+    created once per ``run()`` and converted back only at the API boundary.
+    """
+
+    x: jnp.ndarray        # [7, B]   lane-major Kalman means
+    p: jnp.ndarray        # [49, B]  lane-major covariances (row-major 7x7)
+    pool: slots.SlotPool  # [T, S_pad] lane-major lifecycle
+    frame_count: jnp.ndarray  # [S_pad] int32
+
+
+def _pad_streams(s: int, block_s: int) -> int:
+    return -(-s // block_s) * block_s
+
+
+def lane_state_of(state: SortState, block_s: int) -> LaneSortState:
+    """Engine layout -> persistent lane layout (exact; inverse of
+    :func:`sort_state_of` for any ``S``, multiple of ``block_s`` or not)."""
+    s, t = state.x.shape[0], state.x.shape[1]
+    sp = _pad_streams(s, block_s)
+    grow = sp - s
+    x = jnp.pad(state.x, ((0, grow), (0, 0), (0, 0)))
+    p = jnp.pad(state.p, ((0, grow), (0, 0), (0, 0), (0, 0)),
+                constant_values=1.0)  # keep padded innovation S invertible
+    pool = state.pool._replace(
+        alive=jnp.pad(state.pool.alive, ((0, grow), (0, 0))),
+        age=jnp.pad(state.pool.age, ((0, grow), (0, 0))),
+        hits=jnp.pad(state.pool.hits, ((0, grow), (0, 0))),
+        hit_streak=jnp.pad(state.pool.hit_streak, ((0, grow), (0, 0))),
+        time_since_update=jnp.pad(state.pool.time_since_update,
+                                  ((0, grow), (0, 0))),
+        uid=jnp.pad(state.pool.uid, ((0, grow), (0, 0)), constant_values=-1),
+        next_uid=jnp.pad(state.pool.next_uid, ((0, grow),),
+                         constant_values=1),
+    )
+    return LaneSortState(
+        x=x.transpose(2, 1, 0).reshape(kalman.DIM_X, t * sp),
+        p=p.reshape(sp, t, 49).transpose(2, 1, 0).reshape(49, t * sp),
+        pool=slots.transpose_pool(pool),
+        frame_count=jnp.pad(state.frame_count, ((0, grow),)),
+    )
+
+
+def sort_state_of(lane: LaneSortState, num_streams: int) -> SortState:
+    """Persistent lane layout -> engine layout (drops stream padding)."""
+    t = lane.pool.alive.shape[0]
+    sp = lane.frame_count.shape[0]
+    s = num_streams
+    x = lane.x.reshape(kalman.DIM_X, t, sp)[..., :s].transpose(2, 1, 0)
+    p = (lane.p.reshape(49, t, sp)[..., :s].transpose(2, 1, 0)
+         .reshape(s, t, kalman.DIM_X, kalman.DIM_X))
+    pool = slots.transpose_pool(lane.pool)
+    pool = pool._replace(
+        **{f: getattr(pool, f)[:s]
+           for f in ("alive", "age", "hits", "hit_streak",
+                     "time_since_update", "uid")},
+        next_uid=pool.next_uid[:s])
+    return SortState(x, p, pool, lane.frame_count[:s])
 
 
 class SortOutput(NamedTuple):
@@ -67,8 +158,19 @@ class SortEngine:
                  update_fn: Optional[Callable] = None,
                  iou_fn: Optional[Callable] = None,
                  assoc_fn: Optional[Callable] = None):
+        if config.use_kernels and (predict_fn or update_fn or iou_fn
+                                   or assoc_fn):
+            raise ValueError(
+                "use_kernels=True runs the fused lane-persistent frame "
+                "kernel; per-phase injections only apply to the non-fused "
+                "path (set use_kernels=False).")
         self.config = config
         self.params = kalman.KalmanParams.default(jnp.dtype(config.dtype))
+        # stream padding only buys anything on TPU, where it must match the
+        # fused kernel's lane-block grid; the CPU oracle path has no grid,
+        # so pad nothing and waste no lanes.
+        self._block_s = (max(1, config.block_b // max(1, config.max_trackers))
+                         if jax.default_backend() == "tpu" else 1)
         self._predict = predict_fn or (lambda x, p: kalman.predict(x, p, self.params))
         self._update = update_fn or (
             lambda x, p, z, m: kalman.masked_update(x, p, z, m, self.params))
@@ -95,6 +197,13 @@ class SortEngine:
 
         ``det_boxes [S, D, 4]`` xyxy, ``det_mask [S, D]``.
         """
+        if self.config.use_kernels:
+            # boundary convenience: single frames convert both ways; the
+            # resident fast path is run(), which converts once per video.
+            lane, out = self.lane_step(
+                lane_state_of(state, self._block_s), det_boxes, det_mask)
+            return sort_state_of(lane, det_boxes.shape[0]), out
+
         cfg = self.config
         x, p, pool = state.x, state.p, state.pool
 
@@ -134,6 +243,74 @@ class SortEngine:
                          matched_det=assoc.matched_det)
         return SortState(x, p, pool, frame_count), out
 
+    # -------------------------------------------------- lane-persistent step
+    def lane_step(self, lane: LaneSortState, det_boxes: jnp.ndarray,
+                  det_mask: jnp.ndarray,
+                  frame_mode: str = "auto") -> tuple[LaneSortState, SortOutput]:
+        """One frame entirely in the persistent lane layout.
+
+        Predict -> IoU -> greedy association -> masked update run as a
+        single fused dispatch (``repro.kernels.ops.frame_step``); tracker
+        lifecycle, births, and emit are lane-major integer bookkeeping.
+        Only the per-frame *outputs* (boxes/uid/emit — 6 scalars per slot,
+        not the 49-entry covariance) leave the lane layout.
+        """
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+
+        cfg = self.config
+        s = det_boxes.shape[0]
+        t = cfg.max_trackers
+        sp = lane.frame_count.shape[0]
+        dt = lane.x.dtype
+        x3 = lane.x.reshape(kalman.DIM_X, t, sp)
+        p3 = lane.p.reshape(49, t, sp)
+        det_l = jnp.pad(det_boxes.astype(dt),
+                        ((0, sp - s), (0, 0), (0, 0))).transpose(1, 2, 0)
+        dm_l = jnp.pad(det_mask, ((0, sp - s), (0, 0))).T        # [D, Sp]
+        alive = lane.pool.alive                                  # [T, Sp]
+
+        # 1-3. fused predict + IoU + greedy + masked update (one dispatch)
+        x3, p3, trk_to_det, matched_det = kops.frame_step(
+            x3, p3, det_l, dm_l.astype(dt), alive.astype(dt),
+            iou_threshold=cfg.iou_threshold, block_s=self._block_s,
+            mode=frame_mode)
+
+        # 4a. age & kill (elementwise — runs lane-major as-is)
+        pool = slots.tick(lane.pool, trk_to_det >= 0, cfg.max_age)
+
+        # 4b. births from unmatched detections into free slots
+        unmatched_det = dm_l & ~matched_det
+        slot_for = slots.assign_slots_lane(~pool.alive, unmatched_det)
+        pool = slots.birth_lane(pool, slot_for)
+        z_det = kref.xyxy_to_z_lane(det_l)                       # [4, D, Sp]
+        born = jnp.zeros((t, sp), bool)
+        zb = jnp.zeros((4, t, sp), dt)
+        slot_iota = jnp.arange(t, dtype=jnp.int32)[:, None]
+        for di in range(slot_for.shape[0]):                      # D unrolled
+            sel = slot_for[di][None, :] == slot_iota             # [T, Sp]
+            born = born | sel
+            zb = jnp.where(sel[None], z_det[:, di][:, None], zb)
+        x_init = jnp.concatenate([zb, jnp.zeros((3, t, sp), dt)], axis=0)
+        p_init = kalman.initial_covariance(dt).reshape(49)
+        x3 = jnp.where(born[None], x_init, x3)
+        p3 = jnp.where(born[None], p_init[:, None, None], p3)
+
+        # 5. emit: updated this frame AND (probation passed OR warmup)
+        frame_count = lane.frame_count + 1
+        warmup = (frame_count <= cfg.min_hits)[None]             # [1, Sp]
+        emit = (pool.alive
+                & (pool.time_since_update < 1)
+                & ((pool.hit_streak >= cfg.min_hits) | warmup))
+
+        boxes_l = kref.z_to_xyxy_lane(x3[:4])                    # [T, 4, Sp]
+        out = SortOutput(boxes=boxes_l[..., :s].transpose(2, 0, 1),
+                         uid=pool.uid[:, :s].T, emit=emit[:, :s].T,
+                         matched_det=matched_det[:, :s].T)
+        lane = LaneSortState(x3.reshape(kalman.DIM_X, t * sp),
+                             p3.reshape(49, t * sp), pool, frame_count)
+        return lane, out
+
     # -------------------------------------------------------------------- run
     def run(self, state: SortState, frames: jnp.ndarray,
             frame_masks: jnp.ndarray) -> tuple[SortState, SortOutput]:
@@ -141,7 +318,23 @@ class SortEngine:
 
         ``frames [F, S, D, 4]``, ``frame_masks [F, S, D]`` ->
         outputs stacked over ``F``.
+
+        With ``use_kernels=True`` the state is converted to the persistent
+        lane layout **once**, stays resident across the whole scan, and is
+        converted back only here at the API boundary.
         """
+        if self.config.use_kernels:
+            num_streams = frames.shape[1]
+
+            def lane_body(lst, inp):
+                boxes, mask = inp
+                return self.lane_step(lst, boxes, mask)
+
+            lane0 = lane_state_of(state, self._block_s)
+            lane_f, outs = jax.lax.scan(lane_body, lane0,
+                                        (frames, frame_masks))
+            return sort_state_of(lane_f, num_streams), outs
+
         def body(st, inp):
             boxes, mask = inp
             st, out = self.step(st, boxes, mask)

@@ -1,0 +1,83 @@
+"""Fused whole-frame SORT kernel (Pallas TPU) — one dispatch per frame.
+
+The per-phase kernels in ``kalman_fused``/``iou_cost`` already collapse the
+paper's ~15 tiny BLAS calls per tracker (Table IV) into three dispatches,
+but the engine still pays launch + HBM round-trip overhead *between* them:
+predicted state goes back to HBM, comes back in for the IoU kernel, the
+cost matrix goes out, comes back for the update.  This kernel is the
+paper's fusion argument taken to its limit: predict -> IoU cost -> greedy
+association -> masked update execute in a **single** ``pallas_call`` with
+the whole filter block resident in VMEM (DESIGN.md §2.3).
+
+Layout: streams on lanes, tracker slots on sublane-tiled leading axes —
+``x [7, T, S]``, ``p [49, T, S]``, ``det [D, 4, S]``, masks ``[*, S]``.
+The grid is 1-D over stream blocks of ``block_s`` lanes; every phase is
+trace-time-unrolled vector algebra over the block (the greedy rounds are
+``min(D, T)`` masked argmaxes), so the MXU is never touched — contraction
+dims are 4 and 7, the paper's "extremely small matrices".
+
+VMEM per grid step at T=D=16, block_s=128:
+(7+49)*16*128*4B (state in+out, x2) + 16*4*128*4B*2 (boxes) +
+16*16*128*4B (IoU) ≈ 5.4 MiB — comfortably under the ~16 MiB budget.
+
+Association is greedy (``core.greedy.greedy_assign_lane``) because the
+Hungarian solver's data-dependent augmenting paths do not vectorize over
+lanes; Hungarian remains the injectable non-fused fallback in
+``core.sort.SortEngine``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .kalman_fused import lane_spec
+
+DEFAULT_BLOCK_S = 128
+
+
+def _frame_kernel(x_ref, p_ref, det_ref, dm_ref, alive_ref,
+                  xo_ref, po_ref, t2d_ref, md_ref, *, iou_threshold: float):
+    x, p, t2d, md = ref.frame_lane(
+        x_ref[...], p_ref[...], det_ref[...], dm_ref[...], alive_ref[...],
+        iou_threshold)
+    xo_ref[...] = x
+    po_ref[...] = p
+    t2d_ref[...] = t2d
+    md_ref[...] = md.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iou_threshold", "block_s", "interpret"))
+def fused_frame(x, p, det, det_mask, alive, *, iou_threshold: float = 0.3,
+                block_s: int = DEFAULT_BLOCK_S, interpret: bool = False):
+    """One SORT frame for every stream in a single dispatch.
+
+    ``x [7, T, S]``, ``p [49, T, S]``, ``det [D, 4, S]`` xyxy,
+    ``det_mask [D, S]`` 0/1 float, ``alive [T, S]`` 0/1 float;
+    ``S % block_s == 0``.  Returns
+    ``(x, p, trk_to_det [T, S] int32, matched_det [D, S] int32)``.
+    """
+    t, s = x.shape[1], x.shape[2]
+    d = det.shape[0]
+    assert s % block_s == 0, (s, block_s)
+
+    def spec3(a, b):
+        return pl.BlockSpec((a, b, block_s), lambda i: (0, 0, i))
+
+    return pl.pallas_call(
+        functools.partial(_frame_kernel, iou_threshold=iou_threshold),
+        grid=(s // block_s,),
+        in_specs=[spec3(7, t), spec3(49, t), spec3(d, 4),
+                  lane_spec(d, block_s), lane_spec(t, block_s)],
+        out_specs=[spec3(7, t), spec3(49, t),
+                   lane_spec(t, block_s), lane_spec(d, block_s)],
+        out_shape=[jax.ShapeDtypeStruct((7, t, s), x.dtype),
+                   jax.ShapeDtypeStruct((49, t, s), p.dtype),
+                   jax.ShapeDtypeStruct((t, s), jnp.int32),
+                   jax.ShapeDtypeStruct((d, s), jnp.int32)],
+        interpret=interpret,
+    )(x, p, det, det_mask, alive)

@@ -17,6 +17,11 @@ hardware units.
 Grid: 1-D over lane blocks; BlockSpec pins every operand's sublane extent
 (7 / 49 / 4 / 1, padded to 8-sublane tiles by Mosaic) and tiles only lanes.
 VMEM per grid step at block_b=512: (7+49+4+1+7+49) * 512 * 4B ≈ 234 KiB.
+
+These per-phase kernels still dispatch (and round-trip HBM) three times
+per frame; ``kernels/frame.py`` fuses the whole frame — including the IoU
+cost and greedy association between predict and update — into a single
+dispatch over the persistent lane state (DESIGN.md §2.3).
 """
 from __future__ import annotations
 
@@ -57,7 +62,9 @@ def _step_kernel(x_ref, p_ref, z_ref, m_ref, xo_ref, po_ref):
     po_ref[...] = p_new
 
 
-def _lane_spec(rows: int, block_b: int):
+def lane_spec(rows: int, block_b: int):
+    """BlockSpec pinning the sublane extent and tiling only lanes (shared
+    with ``kernels.frame``)."""
     return pl.BlockSpec((rows, block_b), lambda i: (0, i))
 
 
@@ -69,8 +76,8 @@ def predict(x, p, *, block_b: int = DEFAULT_BLOCK_B, interpret: bool = False):
     return pl.pallas_call(
         _predict_kernel,
         grid=(b // block_b,),
-        in_specs=[_lane_spec(7, block_b), _lane_spec(49, block_b)],
-        out_specs=[_lane_spec(7, block_b), _lane_spec(49, block_b)],
+        in_specs=[lane_spec(7, block_b), lane_spec(49, block_b)],
+        out_specs=[lane_spec(7, block_b), lane_spec(49, block_b)],
         out_shape=[jax.ShapeDtypeStruct((7, b), x.dtype),
                    jax.ShapeDtypeStruct((49, b), p.dtype)],
         interpret=interpret,
@@ -83,13 +90,13 @@ def update(x, p, z, mask, *, block_b: int = DEFAULT_BLOCK_B,
     """Masked update. ``x [7,B]``, ``p [49,B]``, ``z [4,B]``, ``mask [1,B]``."""
     b = x.shape[-1]
     assert b % block_b == 0, (b, block_b)
-    specs = [_lane_spec(7, block_b), _lane_spec(49, block_b),
-             _lane_spec(4, block_b), _lane_spec(1, block_b)]
+    specs = [lane_spec(7, block_b), lane_spec(49, block_b),
+             lane_spec(4, block_b), lane_spec(1, block_b)]
     return pl.pallas_call(
         _update_kernel,
         grid=(b // block_b,),
         in_specs=specs,
-        out_specs=[_lane_spec(7, block_b), _lane_spec(49, block_b)],
+        out_specs=[lane_spec(7, block_b), lane_spec(49, block_b)],
         out_shape=[jax.ShapeDtypeStruct((7, b), x.dtype),
                    jax.ShapeDtypeStruct((49, b), p.dtype)],
         interpret=interpret,
@@ -102,13 +109,13 @@ def fused_step(x, p, z, mask, *, block_b: int = DEFAULT_BLOCK_B,
     """Predict + masked update in a single VMEM residency."""
     b = x.shape[-1]
     assert b % block_b == 0, (b, block_b)
-    specs = [_lane_spec(7, block_b), _lane_spec(49, block_b),
-             _lane_spec(4, block_b), _lane_spec(1, block_b)]
+    specs = [lane_spec(7, block_b), lane_spec(49, block_b),
+             lane_spec(4, block_b), lane_spec(1, block_b)]
     return pl.pallas_call(
         _step_kernel,
         grid=(b // block_b,),
         in_specs=specs,
-        out_specs=[_lane_spec(7, block_b), _lane_spec(49, block_b)],
+        out_specs=[lane_spec(7, block_b), lane_spec(49, block_b)],
         out_shape=[jax.ShapeDtypeStruct((7, b), x.dtype),
                    jax.ShapeDtypeStruct((49, b), p.dtype)],
         interpret=interpret,

@@ -18,11 +18,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import frame as _frame
 from . import iou_cost as _iou_kernel
 from . import kalman_fused as _kalman
 from . import ref
 
-__all__ = ["predict", "update", "iou", "engine_fns", "to_lane", "from_lane"]
+__all__ = ["predict", "update", "iou", "frame_step", "engine_fns",
+           "to_lane", "from_lane"]
 
 
 def _on_tpu() -> bool:
@@ -93,6 +95,32 @@ def iou(det_boxes, trk_boxes, *, block_b: int = _iou_kernel.DEFAULT_BLOCK_B,
     out = _iou_kernel.iou_cost(dl, tl, block_b=block_b,
                                interpret=_resolve(interpret))
     return out[:, :, :s].transpose(2, 0, 1)
+
+
+def frame_step(x, p, det, det_mask, alive, *, iou_threshold: float = 0.3,
+               block_s: int = _frame.DEFAULT_BLOCK_S,
+               mode: str = "auto"):
+    """Single-dispatch fused frame (predict -> IoU -> greedy -> update).
+
+    All operands already in the persistent lane layout (``x [7, T, S]``,
+    ``p [49, T, S]``, ``det [D, 4, S]``, masks ``[*, S]`` 0/1 float) —
+    no per-call conversion.  ``mode``:
+
+    * ``"auto"``   — compiled Pallas kernel on TPU, lane-layout oracle
+      elsewhere (interpret mode pays a Python-per-grid-step tax that would
+      dwarf the frame; the oracle is the same math).
+    * ``"pallas"`` / ``"interpret"`` / ``"ref"`` — force a backend.
+    """
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "ref":
+        x, p, t2d, md = ref.frame_lane(x, p, det, det_mask, alive,
+                                       iou_threshold)
+        return x, p, t2d, md
+    x, p, t2d, md = _frame.fused_frame(
+        x, p, det, det_mask, alive, iou_threshold=iou_threshold,
+        block_s=block_s, interpret=(mode == "interpret"))
+    return x, p, t2d, md > 0
 
 
 def _resolve(interpret: bool | None) -> bool:

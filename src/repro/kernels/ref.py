@@ -117,6 +117,69 @@ def _inv4(s):
             [bl10, bl11, si10, si11]]
 
 
+_EPS = 1e-9
+
+
+def z_to_xyxy_lane(x: jnp.ndarray) -> jnp.ndarray:
+    """Lane-layout ``bbox.z_to_xyxy``: ``x [>=4, ...]`` -> boxes ``[..., 4]``
+    stacked on a *new* axis 1 when input is ``[7, T, B]`` -> ``[T, 4, B]``."""
+    u, v = x[0], x[1]
+    s = jnp.maximum(x[2], 0.0)
+    r = jnp.maximum(x[3], _EPS)
+    w = jnp.sqrt(s * r)
+    h = s / jnp.maximum(w, _EPS)
+    half_w, half_h = w / 2.0, h / 2.0
+    return jnp.stack([u - half_w, v - half_h, u + half_w, v + half_h],
+                     axis=1 if x.ndim == 3 else 0)
+
+
+def xyxy_to_z_lane(box: jnp.ndarray) -> jnp.ndarray:
+    """Lane-layout ``bbox.xyxy_to_z``: ``box [D, 4, B]`` -> ``z [4, D, B]``."""
+    x1, y1, x2, y2 = box[:, 0], box[:, 1], box[:, 2], box[:, 3]
+    w = x2 - x1
+    h = y2 - y1
+    u = x1 + w / 2.0
+    v = y1 + h / 2.0
+    s = w * h
+    r = w / jnp.maximum(h, _EPS)
+    return jnp.stack([u, v, s, r], axis=0)
+
+
+def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
+               det_mask: jnp.ndarray, alive: jnp.ndarray,
+               iou_threshold: float = 0.3):
+    """One whole SORT frame (predict -> IoU -> greedy assign -> masked
+    update) as pure lane-layout vector algebra — the oracle for the
+    single-dispatch ``kernels.frame.fused_frame`` Pallas kernel.
+
+    Shapes (DESIGN.md §2; streams on lanes, tracker slots on sublanes):
+    ``x [7, T, S]``, ``p [49, T, S]``, ``det [D, 4, S]`` xyxy,
+    ``det_mask [D, S]`` (bool or 0/1 float), ``alive [T, S]``.
+
+    Returns ``(x, p, trk_to_det [T, S] int32, matched_det [D, S] bool)``.
+    Tracker lifecycle (tick/birth) stays outside: it is integer bookkeeping
+    off the covariance hot path.
+    """
+    from repro.core.greedy import greedy_assign_lane
+
+    x, p = predict_lane(x, p)                               # [7,T,S], [49,T,S]
+    trk_boxes = z_to_xyxy_lane(x[:4])                       # [T, 4, S]
+    iou = iou_lane(det, trk_boxes)                          # [D, T, S]
+    trk_to_det, matched_det = greedy_assign_lane(
+        iou, det_mask, alive, iou_threshold)
+    # gather each matched tracker's observation via one-hot contraction
+    # over D (D <= ~16, trace-time unrolled; no per-lane dynamic gather)
+    z_all = xyxy_to_z_lane(det)                             # [4, D, S]
+    d = det.shape[0]
+    z_trk = jnp.zeros_like(x[:4])                           # [4, T, S]
+    for di in range(d):
+        sel = (trk_to_det == di)[None]                      # [1, T, S]
+        z_trk = jnp.where(sel, z_all[:, di][:, None], z_trk)
+    mask = (trk_to_det >= 0).astype(x.dtype)[None]          # [1, T, S]
+    x, p = update_lane(x, p, z_trk, mask)
+    return x, p, trk_to_det, matched_det
+
+
 def iou_lane(det: jnp.ndarray, trk: jnp.ndarray) -> jnp.ndarray:
     """IoU on lane layout: ``det [D, 4, B]``, ``trk [T, 4, B]`` -> ``[D, T, B]``."""
     d, t = det.shape[0], trk.shape[0]

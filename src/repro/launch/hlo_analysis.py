@@ -229,10 +229,12 @@ class HloModule:
                 continue
             if kind in ("call", "custom-call", "map",
                         "reduce", "sort", "scatter", "select-and-scatter"):
+                called = None
                 for attr_re in (_TO_APPLY_RE, _CALLS_RE):
                     m = attr_re.search(op.line)
                     if m and m.group(1) in self.computations:
-                        sub = self.analyze(m.group(1), _memo)
+                        called = m.group(1)
+                        sub = self.analyze(called, _memo)
                         flops += sub["flops"]
                         eltwise += sub["eltwise_flops"]
                         for k2, v2 in sub["collectives"].items():
@@ -240,6 +242,13 @@ class HloModule:
                             coll[k2]["count"] += v2["count"]
                             coll[k2]["group"] |= set(v2["group"])
                         break
+                if kind == "call" and called is not None:
+                    # outlined top-level computation (XLA:CPU wraps
+                    # parallel fusions this way): its ops sit at the
+                    # fusion boundary, so its traffic IS this call's
+                    # traffic — and already includes the root's result.
+                    hbm += sub["hbm_bytes"]
+                    continue
                 if kind not in SKIP_BYTES_OPS:
                     hbm += op.result_bytes
                 continue

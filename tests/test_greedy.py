@@ -1,6 +1,9 @@
 """Greedy associator: matching validity + relation to Hungarian optimum."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.greedy import greedy_assign

@@ -1,6 +1,9 @@
 """Kalman filter: equivalence with the numpy reference + filter properties."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bbox, kalman

@@ -1,0 +1,213 @@
+"""Persistent lane-layout state + fused frame kernel (DESIGN.md §2).
+
+Covers: exact round-tripping of the lane conversions (including stream /
+batch counts that are NOT multiples of the lane block, i.e. padding edge
+cases), equivalence of the lane-persistent fused path with the legacy
+per-phase path, the ``SortConfig.use_kernels`` wiring, the lane-layout
+greedy port, and the single-dispatch Pallas kernel in interpret mode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SortConfig, SortEngine, lane_state_of, slots,
+                        sort_state_of)
+from repro.core.greedy import greedy_assign, greedy_assign_lane, \
+    greedy_iou_fn_for_engine
+from repro.data.synthetic import SceneConfig, generate_scene
+from repro.kernels import frame, ops, ref
+
+
+def _scene(seed, frames=30, objects=6):
+    _, _, db, dm = generate_scene(
+        SceneConfig(num_frames=frames, max_objects=objects, seed=seed))
+    return jnp.asarray(db), jnp.asarray(dm)
+
+
+def _rand_state(eng, s, seed=0):
+    """An init() state mutated to a non-trivial population."""
+    rng = np.random.default_rng(seed)
+    st = eng.init(s)
+    t = eng.config.max_trackers
+    x = rng.normal(size=(s, t, 7)).astype(np.float32)
+    a = rng.normal(size=(s, t, 7, 7)).astype(np.float32)
+    p = a @ a.swapaxes(-1, -2) + np.eye(7, dtype=np.float32)
+    alive = rng.random((s, t)) < 0.5
+    uid = np.where(alive, rng.integers(1, 99, (s, t)), -1).astype(np.int32)
+    pool = st.pool._replace(alive=jnp.asarray(alive), uid=jnp.asarray(uid),
+                            age=jnp.asarray(rng.integers(0, 9, (s, t)),
+                                            dtype=jnp.int32))
+    return st._replace(x=jnp.asarray(x), p=jnp.asarray(p), pool=pool,
+                       frame_count=jnp.asarray(rng.integers(0, 9, (s,)),
+                                               dtype=jnp.int32))
+
+
+# ------------------------------------------------------- exact round trips
+@pytest.mark.parametrize("s,block_s", [(1, 4), (3, 4), (4, 4), (5, 4),
+                                       (7, 32), (33, 32)])
+def test_lane_state_roundtrip_exact(s, block_s):
+    """lane_state_of / sort_state_of are exact inverses for stream counts
+    that do and do not divide the lane block (padding edge cases)."""
+    eng = SortEngine(SortConfig(max_trackers=5, max_detections=4))
+    st = _rand_state(eng, s, seed=s)
+    back = sort_state_of(lane_state_of(st, block_s), s)
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("s,t,block_b", [(1, 3, 8), (3, 5, 8), (2, 7, 64),
+                                         (4, 4, 16), (5, 3, 128)])
+def test_to_lane_from_lane_roundtrip_nonmultiple(s, t, block_b):
+    """ops.to_lane / ops.from_lane are exact inverses when S*T is not a
+    multiple of block_b."""
+    rng = np.random.default_rng(s * 10 + t)
+    x = jnp.asarray(rng.normal(size=(s, t, 7)).astype(np.float32))
+    p = jnp.asarray(rng.normal(size=(s, t, 7, 7)).astype(np.float32))
+    xl, pl_ = ops.to_lane(x, p, block_b)
+    assert xl.shape[-1] % block_b == 0
+    x2, p2 = ops.from_lane(xl, pl_, s, t)
+    np.testing.assert_array_equal(np.asarray(x2), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(p))
+
+
+def test_lane_pool_transpose_involution():
+    pool = slots.init_pool((3,), 5)
+    back = slots.transpose_pool(slots.transpose_pool(pool))
+    for a, b in zip(pool, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------ greedy lane port
+@pytest.mark.parametrize("seed", range(8))
+def test_greedy_lane_matches_reference(seed):
+    """Lane port == greedy_assign + scatter inversion, bit for bit
+    (same flat argmax order => same tie-breaking)."""
+    rng = np.random.default_rng(seed)
+    d, t, b = rng.integers(1, 9), rng.integers(1, 9), 5
+    iou = rng.random((b, d, t)).astype(np.float32)
+    dm = rng.random((b, d)) < 0.8
+    tm = rng.random((b, t)) < 0.8
+    det_to_trk = np.asarray(greedy_assign(jnp.asarray(iou), jnp.asarray(dm),
+                                          jnp.asarray(tm), 0.3))
+    t2d_l, md_l = greedy_assign_lane(jnp.asarray(iou.transpose(1, 2, 0)),
+                                     jnp.asarray(dm.T), jnp.asarray(tm.T),
+                                     0.3)
+    t2d_l, md_l = np.asarray(t2d_l).T, np.asarray(md_l).T   # back to [B, ...]
+    for bi in range(b):
+        want_t2d = np.full(t, -1, np.int32)
+        for di, ti in enumerate(det_to_trk[bi]):
+            if ti >= 0:
+                want_t2d[ti] = di
+        np.testing.assert_array_equal(t2d_l[bi], want_t2d)
+        np.testing.assert_array_equal(md_l[bi], det_to_trk[bi] >= 0)
+
+
+# ------------------------------------------------- fused kernel vs oracle
+def test_fused_frame_kernel_matches_oracle():
+    """Single-dispatch Pallas kernel (interpret mode) == pure-jnp oracle."""
+    rng = np.random.default_rng(3)
+    t, d, s, block_s = 6, 5, 8, 4
+    x = jnp.asarray(rng.normal(size=(7, t, s)).astype(np.float32))
+    a = rng.normal(size=(t, s, 7, 7)).astype(np.float32)
+    p_sq = a @ a.swapaxes(-1, -2) + np.eye(7, dtype=np.float32)
+    p = jnp.asarray(p_sq.reshape(t, s, 49).transpose(2, 0, 1).copy())
+    xy = rng.uniform(0, 200, size=(d, 2, s))
+    wh = rng.uniform(5, 100, size=(d, 2, s))
+    det = jnp.asarray(np.concatenate([xy, xy + wh], 1).astype(np.float32))
+    dm = jnp.asarray((rng.random((d, s)) < 0.8).astype(np.float32))
+    alive = jnp.asarray((rng.random((t, s)) < 0.7).astype(np.float32))
+
+    got = frame.fused_frame(x, p, det, dm, alive, iou_threshold=0.3,
+                            block_s=block_s, interpret=True)
+    want = ref.frame_lane(x, p, det, dm, alive, 0.3)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    np.testing.assert_array_equal(np.asarray(got[3]) > 0,
+                                  np.asarray(want[3]))
+
+
+# ----------------------------------------- lane-persistent run() vs legacy
+@pytest.mark.parametrize("num_streams", [1, 3])
+def test_lane_run_bit_identical_to_legacy_lane_math(num_streams):
+    """Full run(): the lane-persistent path == the legacy per-phase engine
+    driving the *same* lane-layout math (ref kernels + greedy assoc) —
+    same ops per element, so outputs match exactly."""
+    db, dm = _scene(11, frames=40)
+    d = db.shape[1]
+    db = jnp.repeat(db[:, None], num_streams, 1)
+    dm = jnp.repeat(dm[:, None], num_streams, 1)
+
+    eng_lane = SortEngine(SortConfig(max_trackers=16, max_detections=d,
+                                     use_kernels=True))
+    _, out_lane = jax.jit(eng_lane.run)(eng_lane.init(num_streams), db, dm)
+
+    pf, uf, jf = ops.engine_fns(use_ref=True)
+    eng_legacy = SortEngine(
+        SortConfig(max_trackers=16, max_detections=d),
+        predict_fn=pf, update_fn=uf, iou_fn=jf,
+        assoc_fn=greedy_iou_fn_for_engine(0.3))
+    _, out_legacy = jax.jit(eng_legacy.run)(eng_legacy.init(num_streams),
+                                            db, dm)
+
+    np.testing.assert_array_equal(np.asarray(out_lane.uid),
+                                  np.asarray(out_legacy.uid))
+    np.testing.assert_array_equal(np.asarray(out_lane.emit),
+                                  np.asarray(out_legacy.emit))
+    np.testing.assert_array_equal(np.asarray(out_lane.matched_det),
+                                  np.asarray(out_legacy.matched_det))
+    np.testing.assert_allclose(np.asarray(out_lane.boxes),
+                               np.asarray(out_legacy.boxes),
+                               rtol=1e-6, atol=1e-4)
+
+
+# ------------------------------------------------ use_kernels flag wiring
+@pytest.mark.parametrize("seed", [0, 9])
+def test_use_kernels_flag_selects_matching_fused_path(seed):
+    """Regression for the once-dead SortConfig.use_kernels flag: True and
+    False must produce matching tracks on a synthetic scene (greedy ==
+    Hungarian on these scenes; float tolerance covers einsum-vs-unrolled
+    op order)."""
+    db, dm = _scene(seed)
+    d = db.shape[1]
+    db, dm = db[:, None], dm[:, None]
+    outs = {}
+    for flag in (False, True):
+        eng = SortEngine(SortConfig(max_trackers=16, max_detections=d,
+                                    use_kernels=flag))
+        _, outs[flag] = jax.jit(eng.run)(eng.init(1), db, dm)
+    np.testing.assert_array_equal(np.asarray(outs[True].uid),
+                                  np.asarray(outs[False].uid))
+    np.testing.assert_array_equal(np.asarray(outs[True].emit),
+                                  np.asarray(outs[False].emit))
+    np.testing.assert_allclose(np.asarray(outs[True].boxes),
+                               np.asarray(outs[False].boxes),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_use_kernels_single_step_matches_run():
+    """step() under use_kernels (convert -> lane_step -> convert) advances
+    identically to one run() frame."""
+    db, dm = _scene(4, frames=3)
+    d = db.shape[1]
+    eng = SortEngine(SortConfig(max_trackers=16, max_detections=d,
+                                use_kernels=True))
+    st = eng.init(2)
+    db2 = jnp.repeat(db[:, None], 2, 1)
+    dm2 = jnp.repeat(dm[:, None], 2, 1)
+    st1, out1 = jax.jit(eng.step)(st, db2[0], dm2[0])
+    _, outs = jax.jit(eng.run)(st, db2[:1], dm2[:1])
+    np.testing.assert_array_equal(np.asarray(out1.uid),
+                                  np.asarray(outs.uid[0]))
+    np.testing.assert_allclose(np.asarray(out1.boxes),
+                               np.asarray(outs.boxes[0]), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_use_kernels_rejects_per_phase_injections():
+    with pytest.raises(ValueError):
+        SortEngine(SortConfig(use_kernels=True), iou_fn=lambda a, b: a)

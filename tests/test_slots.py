@@ -1,6 +1,9 @@
 """Slot-pool lifecycle invariants (shared by trackers and serving)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import slots
