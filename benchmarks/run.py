@@ -18,13 +18,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import (association_ablation, datasets, kernel_ai,
-                            scaling, speedup)
+                            ragged, scaling, speedup)
 
     sections = [
         ("tableI", datasets.run),
         ("tableIV", kernel_ai.run),
         ("tableV", speedup.run),
         ("tableVI", scaling.run),
+        ("ragged", ragged.run),
         ("ablation", association_ablation.run),
     ]
     print("name,us_per_call,derived")

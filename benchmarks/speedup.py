@@ -5,12 +5,12 @@ parallel-Python SORT.  Our analogue: the per-stream numpy/scipy reference
 (same per-op dispatch pattern as the original) vs. the single fused jitted
 batched engine, at equal work (same sequences).
 
-Also the Table IV analogue (dispatch accounting, see DESIGN.md §3): frame
+Also the Table IV analogue (dispatch accounting, see DESIGN.md §4): frame
 latency for the legacy per-phase engine vs the lane-persistent fused path
 (``use_kernels=True``), which collapses the predict / IoU / update
 dispatches and their layout round-trips into one ``fused_frame`` call per
 frame on TPU.  Note the two engine rows differ in association too
-(Hungarian vs greedy, DESIGN.md §4), so off-TPU — where both compile to
+(Hungarian vs greedy, DESIGN.md §5), so off-TPU — where both compile to
 one XLA program — the comparison isolates layout residency + association,
 not launch overhead.
 """

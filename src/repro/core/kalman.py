@@ -12,7 +12,7 @@ as trace-time-unrolled einsums so the batch axis lands on the vector lanes.
 
 The innovation covariance ``S`` is 4x4; we invert it with a branch-free
 closed-form blockwise inverse (exact for SPD matrices) instead of Cholesky —
-see DESIGN.md §2 "What did NOT transfer".
+see DESIGN.md §5 "What did NOT transfer".
 """
 from __future__ import annotations
 

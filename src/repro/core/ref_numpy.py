@@ -84,12 +84,24 @@ class KalmanBoxTracker:
 
 
 class Sort:
-    """Per-stream SORT, Bewley-reference semantics."""
+    """Per-stream SORT, Bewley-reference semantics.
 
-    def __init__(self, max_age=1, min_hits=3, iou_threshold=0.3):
+    ``assoc`` selects the association oracle: ``"hungarian"`` (Bewley's
+    optimal assignment — what the batched engine's default path runs) or
+    ``"greedy"`` (global best-first with the same det-major tie-breaking
+    as ``core.greedy.greedy_assign`` — what the fused lane path runs), so
+    both engine paths have an end-to-end numpy ground truth
+    (``tests/test_oracle_parity.py``).
+    """
+
+    def __init__(self, max_age=1, min_hits=3, iou_threshold=0.3,
+                 assoc="hungarian"):
+        if assoc not in ("hungarian", "greedy"):
+            raise ValueError(f"unknown assoc {assoc!r}")
         self.max_age = max_age
         self.min_hits = min_hits
         self.iou_threshold = iou_threshold
+        self.assoc = assoc
         self.trackers: list[KalmanBoxTracker] = []
         self.frame_count = 0
         self.next_uid = 1
@@ -127,13 +139,27 @@ class Sort:
         for i in range(nd):
             for j in range(nt):
                 mat[i, j] = iou(dets[i], preds[j])
-        ri, ci = linear_sum_assignment(-mat)
         matches, md, mt = [], set(), set()
-        for i, j in zip(ri, ci):
-            if mat[i, j] >= self.iou_threshold:
+        if self.assoc == "greedy":
+            # global best-first; flat row-major argmax = det-major
+            # tie-breaking, mirroring core.greedy.greedy_assign
+            score = np.where(mat >= self.iou_threshold, mat, -1.0)
+            for _ in range(min(nd, nt)):
+                i, j = divmod(int(np.argmax(score)), nt)
+                if score[i, j] <= 0.0:
+                    break
                 matches.append((i, j))
                 md.add(i)
                 mt.add(j)
+                score[i, :] = -1.0
+                score[:, j] = -1.0
+        else:
+            ri, ci = linear_sum_assignment(-mat)
+            for i, j in zip(ri, ci):
+                if mat[i, j] >= self.iou_threshold:
+                    matches.append((i, j))
+                    md.add(i)
+                    mt.add(j)
         return (matches,
                 [i for i in range(nd) if i not in md],
                 [j for j in range(nt) if j not in mt])

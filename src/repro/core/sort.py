@@ -137,6 +137,92 @@ def sort_state_of(lane: LaneSortState, num_streams: int) -> SortState:
     return SortState(x, p, pool, lane.frame_count[:s])
 
 
+# SlotPool fields carrying a slot axis (next_uid is per-stream only)
+_POOL_SLOT_FIELDS = ("alive", "age", "hits", "hit_streak",
+                     "time_since_update", "uid")
+
+
+def _select_pool(slot_mask: jnp.ndarray, stream_mask: jnp.ndarray,
+                 new: slots.SlotPool, old: slots.SlotPool) -> slots.SlotPool:
+    """Per-stream pool select: ``new`` where the mask holds, else ``old``.
+    ``slot_mask`` broadcasts over the slot fields (either orientation),
+    ``stream_mask`` over the per-stream uid counter."""
+    return new._replace(
+        **{f: jnp.where(slot_mask, getattr(new, f), getattr(old, f))
+           for f in _POOL_SLOT_FIELDS},
+        next_uid=jnp.where(stream_mask, new.next_uid, old.next_uid))
+
+
+def _reset_pool(pool: slots.SlotPool, reset_lane_major: jnp.ndarray,
+                reset_streams_: jnp.ndarray,
+                uid_start: int = 1) -> slots.SlotPool:
+    """Masked pool re-init (``slots.init_pool``'s values, applied in
+    place): ``reset_lane_major`` broadcasts over the slot fields,
+    ``reset_streams_`` over the per-stream uid counter."""
+    zero = jnp.zeros((), jnp.int32)
+    return slots.SlotPool(
+        alive=jnp.where(reset_lane_major, False, pool.alive),
+        age=jnp.where(reset_lane_major, zero, pool.age),
+        hits=jnp.where(reset_lane_major, zero, pool.hits),
+        hit_streak=jnp.where(reset_lane_major, zero, pool.hit_streak),
+        time_since_update=jnp.where(reset_lane_major, zero,
+                                    pool.time_since_update),
+        uid=jnp.where(reset_lane_major, -1, pool.uid),
+        next_uid=jnp.where(reset_streams_, uid_start, pool.next_uid),
+    )
+
+
+def reset_streams(state: SortState, reset: jnp.ndarray,
+                  uid_start: int = 1) -> SortState:
+    """Masked :meth:`SortEngine.init`: streams with ``reset=True`` return
+    to the freshly-initialised state (zero Kalman means, initial
+    covariance, empty pool, ``next_uid=uid_start``, ``frame_count=0``)
+    while every other stream is untouched.  This is how the ragged
+    scheduler recycles an engine-layout lane for a newly admitted
+    sequence (DESIGN.md §3).
+    """
+    r1 = reset[:, None]                                          # [S, 1]
+    p0 = kalman.initial_covariance(state.p.dtype)
+    return SortState(
+        x=jnp.where(r1[..., None], 0.0, state.x),
+        p=jnp.where(r1[..., None, None], p0, state.p),
+        pool=_reset_pool(state.pool, r1, reset, uid_start),
+        frame_count=jnp.where(reset, 0, state.frame_count),
+    )
+
+
+def reset_lanes(lane: LaneSortState, reset: jnp.ndarray,
+                uid_start: int = 1) -> LaneSortState:
+    """:func:`reset_streams` for the persistent lane layout: ``reset [S]``
+    bool (``S <= S_pad``; padded with False like ``lane_step``'s
+    ``stream_active``) masks whole streams (every tracker slot of the
+    lane) back to the init state without leaving the lane layout.
+    """
+    t = lane.pool.alive.shape[0]
+    sp = lane.frame_count.shape[0]
+    if reset.shape[0] != sp:
+        reset = jnp.pad(reset, ((0, sp - reset.shape[0]),))
+    r_lane = reset[None, :]                                      # [1, Sp]
+    x3 = lane.x.reshape(kalman.DIM_X, t, sp)
+    p3 = lane.p.reshape(49, t, sp)
+    p0 = kalman.initial_covariance(lane.p.dtype).reshape(49)
+    x3 = jnp.where(r_lane[None], 0.0, x3)
+    p3 = jnp.where(r_lane[None], p0[:, None, None], p3)
+    return LaneSortState(
+        x=x3.reshape(kalman.DIM_X, t * sp),
+        p=p3.reshape(49, t * sp),
+        pool=_reset_pool(lane.pool, r_lane, reset, uid_start),
+        frame_count=jnp.where(reset, 0, lane.frame_count),
+    )
+
+
+def reset_ragged(state, reset: jnp.ndarray, uid_start: int = 1):
+    """Dispatch the masked re-init by state layout (scheduler glue)."""
+    if isinstance(state, LaneSortState):
+        return reset_lanes(state, reset, uid_start)
+    return reset_streams(state, reset, uid_start)
+
+
 class SortOutput(NamedTuple):
     boxes: jnp.ndarray    # [S, T, 4] xyxy of every slot (post update/birth)
     uid: jnp.ndarray      # [S, T] track id, -1 if dead
@@ -246,7 +332,9 @@ class SortEngine:
     # -------------------------------------------------- lane-persistent step
     def lane_step(self, lane: LaneSortState, det_boxes: jnp.ndarray,
                   det_mask: jnp.ndarray,
-                  frame_mode: str = "auto") -> tuple[LaneSortState, SortOutput]:
+                  frame_mode: str = "auto",
+                  stream_active: Optional[jnp.ndarray] = None,
+                  ) -> tuple[LaneSortState, SortOutput]:
         """One frame entirely in the persistent lane layout.
 
         Predict -> IoU -> greedy association -> masked update run as a
@@ -254,6 +342,12 @@ class SortEngine:
         lifecycle, births, and emit are lane-major integer bookkeeping.
         Only the per-frame *outputs* (boxes/uid/emit — 6 scalars per slot,
         not the 49-entry covariance) leave the lane layout.
+
+        ``stream_active [S]`` bool (optional) is the ragged-stream mask
+        (DESIGN.md §3): streams with ``active=False`` are exact no-ops —
+        state, lifecycle, and ``frame_count`` are untouched and nothing is
+        emitted — inside the same single dispatch, so lane membership can
+        churn every frame without re-dispatch or recompilation.
         """
         from repro.kernels import ops as kops
         from repro.kernels import ref as kref
@@ -269,10 +363,13 @@ class SortEngine:
                         ((0, sp - s), (0, 0), (0, 0))).transpose(1, 2, 0)
         dm_l = jnp.pad(det_mask, ((0, sp - s), (0, 0))).T        # [D, Sp]
         alive = lane.pool.alive                                  # [T, Sp]
+        act = (None if stream_active is None
+               else jnp.pad(stream_active, ((0, sp - s),)))      # [Sp] bool
 
         # 1-3. fused predict + IoU + greedy + masked update (one dispatch)
         x3, p3, trk_to_det, matched_det = kops.frame_step(
             x3, p3, det_l, dm_l.astype(dt), alive.astype(dt),
+            None if act is None else act.astype(dt)[None],
             iou_threshold=cfg.iou_threshold, block_s=self._block_s,
             mode=frame_mode)
 
@@ -281,6 +378,8 @@ class SortEngine:
 
         # 4b. births from unmatched detections into free slots
         unmatched_det = dm_l & ~matched_det
+        if act is not None:
+            unmatched_det = unmatched_det & act[None]
         slot_for = slots.assign_slots_lane(~pool.alive, unmatched_det)
         pool = slots.birth_lane(pool, slot_for)
         z_det = kref.xyxy_to_z_lane(det_l)                       # [4, D, Sp]
@@ -296,12 +395,21 @@ class SortEngine:
         x3 = jnp.where(born[None], x_init, x3)
         p3 = jnp.where(born[None], p_init[:, None, None], p3)
 
+        if act is not None:
+            # inactive lanes: lifecycle freezes (the kernel already left
+            # x/p untouched, and no matches/births happened above)
+            pool = _select_pool(act[None], act, pool, lane.pool)
+            frame_count = lane.frame_count + act.astype(jnp.int32)
+        else:
+            frame_count = lane.frame_count + 1
+
         # 5. emit: updated this frame AND (probation passed OR warmup)
-        frame_count = lane.frame_count + 1
         warmup = (frame_count <= cfg.min_hits)[None]             # [1, Sp]
         emit = (pool.alive
                 & (pool.time_since_update < 1)
                 & ((pool.hit_streak >= cfg.min_hits) | warmup))
+        if act is not None:
+            emit = emit & act[None]
 
         boxes_l = kref.z_to_xyxy_lane(x3[:4])                    # [T, 4, Sp]
         out = SortOutput(boxes=boxes_l[..., :s].transpose(2, 0, 1),
@@ -310,6 +418,50 @@ class SortEngine:
         lane = LaneSortState(x3.reshape(kalman.DIM_X, t * sp),
                              p3.reshape(49, t * sp), pool, frame_count)
         return lane, out
+
+    # ------------------------------------------------------ ragged stepping
+    def init_ragged(self, num_lanes: int):
+        """Initial state for :meth:`step_ragged` — the scheduler's fixed
+        lane budget.  Lane-persistent layout when ``use_kernels`` else the
+        engine layout (both paths serve the ragged scheduler identically).
+        """
+        state = self.init(num_lanes)
+        if self.config.use_kernels:
+            return lane_state_of(state, self._block_s)
+        return state
+
+    def step_ragged(self, state, det_boxes: jnp.ndarray,
+                    det_mask: jnp.ndarray, active: jnp.ndarray):
+        """One frame for a ragged multiplex of sequences over fixed lanes.
+
+        ``det_boxes [L, D, 4]``, ``det_mask [L, D]``, ``active [L]`` bool:
+        lanes whose sequence has ended (or that are awaiting admission)
+        pass ``active=False`` and are **exact no-ops** — state, lifecycle,
+        and ``frame_count`` are untouched and ``emit`` is all-False — so a
+        lane's track stream is bit-identical to running its sequences
+        back-to-back alone, regardless of what the other lanes carry.
+
+        ``state`` is whatever :meth:`init_ragged` returned for this engine
+        (``LaneSortState`` on the fused path, masked within the single
+        dispatch; ``SortState`` on the per-phase path, masked around
+        :meth:`step`).
+        """
+        if self.config.use_kernels:
+            return self.lane_step(state, det_boxes, det_mask,
+                                  stream_active=active)
+
+        a1 = active[:, None]                                     # [L, 1]
+        new, out = self.step(state, det_boxes, det_mask & a1)
+        pool = _select_pool(a1, active, new.pool, state.pool)
+        masked = SortState(
+            x=jnp.where(a1[..., None], new.x, state.x),
+            p=jnp.where(a1[..., None, None], new.p, state.p),
+            pool=pool,
+            frame_count=jnp.where(active, new.frame_count,
+                                  state.frame_count))
+        out = out._replace(emit=out.emit & a1,
+                           matched_det=out.matched_det & a1)
+        return masked, out
 
     # -------------------------------------------------------------------- run
     def run(self, state: SortState, frames: jnp.ndarray,

@@ -25,10 +25,17 @@ class StreamBatch:
 def pack(sequences, max_dets: int | None = None, pad_multiple: int = 1):
     """Pack ``[(name, det_boxes [F_i, D_i, 4], det_mask [F_i, D_i])]`` into a
     dense batch padded to the longest sequence (and ``S`` to ``pad_multiple``,
-    so the stream axis divides the mesh's data parallelism)."""
+    so the stream axis divides the mesh's data parallelism).
+
+    Degenerate inputs stay well-formed: an empty sequence list yields a
+    ``[0, 0, D, 4]`` batch, zero/single-frame sequences pack like any other
+    length, and ``pad_multiple`` never shrinks an already-aligned ``S``.
+    """
+    if pad_multiple < 1:
+        raise ValueError(f"pad_multiple must be >= 1, got {pad_multiple}")
     names = tuple(s[0] for s in sequences)
-    f = max(s[1].shape[0] for s in sequences)
-    d = max_dets or max(s[1].shape[1] for s in sequences)
+    f = max((s[1].shape[0] for s in sequences), default=0)
+    d = max_dets or max((s[1].shape[1] for s in sequences), default=1)
     s_real = len(sequences)
     s_pad = -(-s_real // pad_multiple) * pad_multiple
     det_boxes = np.zeros((f, s_pad, d, 4), np.float32)
@@ -44,9 +51,17 @@ def pack(sequences, max_dets: int | None = None, pad_multiple: int = 1):
 
 def length_buckets(sequences, num_buckets: int = 4):
     """Group sequences into length buckets (straggler mitigation: a 71-frame
-    TUD-Campus never pads out to a 1000-frame ETH-Bahnhof)."""
+    TUD-Campus never pads out to a 1000-frame ETH-Bahnhof).
+
+    Never returns empty buckets: with fewer sequences than buckets each
+    bucket holds one sequence, and an empty input yields no buckets at all.
+    """
+    if num_buckets < 1:
+        raise ValueError(f"num_buckets must be >= 1, got {num_buckets}")
     seqs = sorted(sequences, key=lambda s: s[1].shape[0])
     n = len(seqs)
+    if n == 0:
+        return []
     out = []
     per = -(-n // num_buckets)
     for i in range(0, n, per):
@@ -61,3 +76,55 @@ def replicate(sequences, times: int):
         for name, db, dm in sequences:
             out.append((f"{name}#{r}", db, dm))
     return out
+
+
+# ---------------------------------------------------------------- draining
+@dataclasses.dataclass(frozen=True)
+class SequenceTracks:
+    """One finished sequence's track stream, dense over its own frames.
+
+    ``boxes [F_i, T, 4]`` xyxy, ``uid [F_i, T]`` int32, ``emit [F_i, T]``
+    bool — the rows of :class:`repro.core.SortOutput` that belonged to this
+    sequence, in frame order, exactly as a solo run would have produced
+    them (the ragged scheduler's lane-recycling invariant, DESIGN.md §3).
+    """
+
+    name: str
+    boxes: np.ndarray
+    uid: np.ndarray
+    emit: np.ndarray
+
+    @property
+    def num_frames(self) -> int:
+        return self.boxes.shape[0]
+
+
+class ReorderBuffer:
+    """In-order release of out-of-order completions.
+
+    Sequences multiplexed over recycled lanes finish in length order, not
+    submission order; ``put(index, item)`` parks a completion and
+    ``pop_ready()`` releases the longest run of consecutively-indexed items
+    starting at the watermark — so consumers (result writers, metric
+    aggregators) always observe submission order, the scheduler's
+    drain/flush contract.
+    """
+
+    def __init__(self, start: int = 0):
+        self._next = start
+        self._held: dict[int, object] = {}
+
+    def put(self, index: int, item) -> None:
+        if index < self._next or index in self._held:
+            raise ValueError(f"sequence index {index} already released")
+        self._held[index] = item
+
+    def pop_ready(self) -> list:
+        out = []
+        while self._next in self._held:
+            out.append(self._held.pop(self._next))
+            self._next += 1
+        return out
+
+    def __len__(self) -> int:
+        return len(self._held)

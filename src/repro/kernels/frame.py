@@ -39,11 +39,13 @@ from .kalman_fused import lane_spec
 DEFAULT_BLOCK_S = 128
 
 
-def _frame_kernel(x_ref, p_ref, det_ref, dm_ref, alive_ref,
-                  xo_ref, po_ref, t2d_ref, md_ref, *, iou_threshold: float):
+def _frame_kernel(x_ref, p_ref, det_ref, dm_ref, alive_ref, *refs,
+                  iou_threshold: float, has_active: bool):
+    active = refs[0][...] if has_active else None
+    xo_ref, po_ref, t2d_ref, md_ref = refs[1:] if has_active else refs
     x, p, t2d, md = ref.frame_lane(
         x_ref[...], p_ref[...], det_ref[...], dm_ref[...], alive_ref[...],
-        iou_threshold)
+        iou_threshold, active=active)
     xo_ref[...] = x
     po_ref[...] = p
     t2d_ref[...] = t2d
@@ -52,13 +54,17 @@ def _frame_kernel(x_ref, p_ref, det_ref, dm_ref, alive_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("iou_threshold", "block_s", "interpret"))
-def fused_frame(x, p, det, det_mask, alive, *, iou_threshold: float = 0.3,
+def fused_frame(x, p, det, det_mask, alive, stream_active=None, *,
+                iou_threshold: float = 0.3,
                 block_s: int = DEFAULT_BLOCK_S, interpret: bool = False):
     """One SORT frame for every stream in a single dispatch.
 
     ``x [7, T, S]``, ``p [49, T, S]``, ``det [D, 4, S]`` xyxy,
     ``det_mask [D, S]`` 0/1 float, ``alive [T, S]`` 0/1 float;
-    ``S % block_s == 0``.  Returns
+    ``S % block_s == 0``.  ``stream_active [1, S]`` 0/1 float (optional)
+    is the ragged-stream lane mask (DESIGN.md §3): inactive lanes pass
+    through the kernel as exact no-ops, so finished sequences cost no
+    extra dispatch while they wait for a recycled admission.  Returns
     ``(x, p, trk_to_det [T, S] int32, matched_det [D, S] int32)``.
     """
     t, s = x.shape[1], x.shape[2]
@@ -68,11 +74,18 @@ def fused_frame(x, p, det, det_mask, alive, *, iou_threshold: float = 0.3,
     def spec3(a, b):
         return pl.BlockSpec((a, b, block_s), lambda i: (0, 0, i))
 
+    operands = [x, p, det, det_mask, alive]
+    in_specs = [spec3(7, t), spec3(49, t), spec3(d, 4),
+                lane_spec(d, block_s), lane_spec(t, block_s)]
+    if stream_active is not None:
+        operands.append(stream_active)
+        in_specs.append(lane_spec(1, block_s))
+
     return pl.pallas_call(
-        functools.partial(_frame_kernel, iou_threshold=iou_threshold),
+        functools.partial(_frame_kernel, iou_threshold=iou_threshold,
+                          has_active=stream_active is not None),
         grid=(s // block_s,),
-        in_specs=[spec3(7, t), spec3(49, t), spec3(d, 4),
-                  lane_spec(d, block_s), lane_spec(t, block_s)],
+        in_specs=in_specs,
         out_specs=[spec3(7, t), spec3(49, t),
                    lane_spec(t, block_s), lane_spec(d, block_s)],
         out_shape=[jax.ShapeDtypeStruct((7, t, s), x.dtype),
@@ -80,4 +93,4 @@ def fused_frame(x, p, det, det_mask, alive, *, iou_threshold: float = 0.3,
                    jax.ShapeDtypeStruct((t, s), jnp.int32),
                    jax.ShapeDtypeStruct((d, s), jnp.int32)],
         interpret=interpret,
-    )(x, p, det, det_mask, alive)
+    )(*operands)

@@ -97,14 +97,17 @@ def iou(det_boxes, trk_boxes, *, block_b: int = _iou_kernel.DEFAULT_BLOCK_B,
     return out[:, :, :s].transpose(2, 0, 1)
 
 
-def frame_step(x, p, det, det_mask, alive, *, iou_threshold: float = 0.3,
+def frame_step(x, p, det, det_mask, alive, stream_active=None, *,
+               iou_threshold: float = 0.3,
                block_s: int = _frame.DEFAULT_BLOCK_S,
                mode: str = "auto"):
     """Single-dispatch fused frame (predict -> IoU -> greedy -> update).
 
     All operands already in the persistent lane layout (``x [7, T, S]``,
     ``p [49, T, S]``, ``det [D, 4, S]``, masks ``[*, S]`` 0/1 float) —
-    no per-call conversion.  ``mode``:
+    no per-call conversion.  ``stream_active [1, S]`` 0/1 float (optional)
+    marks which lanes carry a live ragged sequence this frame; inactive
+    lanes are exact in-kernel no-ops (DESIGN.md §3).  ``mode``:
 
     * ``"auto"``   — compiled Pallas kernel on TPU, lane-layout oracle
       elsewhere (interpret mode pays a Python-per-grid-step tax that would
@@ -115,10 +118,11 @@ def frame_step(x, p, det, det_mask, alive, *, iou_threshold: float = 0.3,
         mode = "pallas" if _on_tpu() else "ref"
     if mode == "ref":
         x, p, t2d, md = ref.frame_lane(x, p, det, det_mask, alive,
-                                       iou_threshold)
+                                       iou_threshold, active=stream_active)
         return x, p, t2d, md
     x, p, t2d, md = _frame.fused_frame(
-        x, p, det, det_mask, alive, iou_threshold=iou_threshold,
+        x, p, det, det_mask, alive, stream_active,
+        iou_threshold=iou_threshold,
         block_s=block_s, interpret=(mode == "interpret"))
     return x, p, t2d, md > 0
 

@@ -147,7 +147,8 @@ def xyxy_to_z_lane(box: jnp.ndarray) -> jnp.ndarray:
 
 def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
                det_mask: jnp.ndarray, alive: jnp.ndarray,
-               iou_threshold: float = 0.3):
+               iou_threshold: float = 0.3,
+               active: jnp.ndarray | None = None):
     """One whole SORT frame (predict -> IoU -> greedy assign -> masked
     update) as pure lane-layout vector algebra — the oracle for the
     single-dispatch ``kernels.frame.fused_frame`` Pallas kernel.
@@ -156,12 +157,22 @@ def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
     ``x [7, T, S]``, ``p [49, T, S]``, ``det [D, 4, S]`` xyxy,
     ``det_mask [D, S]`` (bool or 0/1 float), ``alive [T, S]``.
 
+    ``active [1, S]`` (bool or 0/1 float, optional) is the ragged-stream
+    lane mask (DESIGN.md §3): lanes with ``active == 0`` are exact no-ops —
+    their detections are masked out (no matches, so ``trk_to_det == -1``
+    and ``matched_det == False`` fall out of the greedy gate) and their
+    state is restored after predict/update, bit-identical to never having
+    run the frame.
+
     Returns ``(x, p, trk_to_det [T, S] int32, matched_det [D, S] bool)``.
     Tracker lifecycle (tick/birth) stays outside: it is integer bookkeeping
     off the covariance hot path.
     """
     from repro.core.greedy import greedy_assign_lane
 
+    x_in, p_in = x, p
+    if active is not None:
+        det_mask = det_mask * (active > 0)                  # [D,S] & [1,S]
     x, p = predict_lane(x, p)                               # [7,T,S], [49,T,S]
     trk_boxes = z_to_xyxy_lane(x[:4])                       # [T, 4, S]
     iou = iou_lane(det, trk_boxes)                          # [D, T, S]
@@ -177,6 +188,10 @@ def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
         z_trk = jnp.where(sel, z_all[:, di][:, None], z_trk)
     mask = (trk_to_det >= 0).astype(x.dtype)[None]          # [1, T, S]
     x, p = update_lane(x, p, z_trk, mask)
+    if active is not None:
+        keep = (active > 0)[:, None]                        # [1, 1, S]
+        x = jnp.where(keep, x, x_in)
+        p = jnp.where(keep, p, p_in)
     return x, p, trk_to_det, matched_det
 
 

@@ -1,0 +1,9 @@
+"""Serving layer — online multiplexing of ragged workloads onto the engine.
+
+The paper's throughput result assigns one worker per video file; real
+serving traffic is an unbounded set of sequences with ragged lengths
+(paper Table I spans 71–1000 frames).  :mod:`repro.serve.scheduler`
+multiplexes that traffic onto the engine's fixed lane budget with exact
+lane recycling (DESIGN.md §3).
+"""
+from .scheduler import StreamScheduler  # noqa: F401

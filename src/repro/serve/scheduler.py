@@ -1,0 +1,227 @@
+"""Online multi-stream scheduler — ragged-length lane recycling.
+
+The paper parallelizes throughput by giving each OpenMP worker one video
+file (§VI); its TPU analogue (``SortEngine.run``) scans a *fixed* batch of
+equal-length streams.  Real serving traffic is neither fixed nor
+equal-length: sequences arrive over time with lengths spanning an order of
+magnitude (paper Table I: 71–1000 frames), so a pad-to-max batch wastes
+most of its lane-steps on padding and a re-batch-per-departure recompiles
+constantly.
+
+This scheduler multiplexes an unbounded queue of ragged sequences onto a
+fixed budget of ``num_lanes`` engine lanes (DESIGN.md §3):
+
+* **Admission** is FIFO: the moment a lane's sequence ends, the lane is
+  recycled — masked re-init (``core.sort.reset_ragged``) plus the new
+  sequence's first frame execute in the *same* fused step.
+* **Ragged stepping**: every step runs ``SortEngine.step_ragged`` with a
+  per-lane ``active`` mask, so lanes between sequences are exact no-ops
+  inside the single dispatch — membership churns every frame with no
+  re-dispatch and no recompilation.
+* **Chunked execution**: the host plans ``chunk`` steps at a time (the
+  admission schedule is data-independent, so it can be planned ahead) and
+  runs them as one jitted ``lax.scan`` — one host round-trip per chunk,
+  not per frame.
+* **Drain**: finished sequences are emitted **in submission order** via
+  :class:`repro.data.stream.ReorderBuffer`; each carries its dense track
+  stream (:class:`repro.data.stream.SequenceTracks`), bit-identical to a
+  solo run of that sequence (the lane-recycling invariant, locked down by
+  ``tests/test_scheduler.py``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sort as sort_mod
+from repro.core.sort import SortEngine
+from repro.data.stream import ReorderBuffer, SequenceTracks
+
+
+@dataclasses.dataclass
+class _Seq:
+    """One submitted sequence and its in-flight output buffers."""
+
+    index: int
+    name: str
+    det_boxes: np.ndarray          # [F, D, 4] padded to the scheduler's D
+    det_mask: np.ndarray           # [F, D]
+    boxes: list = dataclasses.field(default_factory=list)
+    uid: list = dataclasses.field(default_factory=list)
+    emit: list = dataclasses.field(default_factory=list)
+
+    @property
+    def length(self) -> int:
+        return self.det_boxes.shape[0]
+
+
+class StreamScheduler:
+    """Multiplex ragged sequences onto ``num_lanes`` recycled engine lanes.
+
+    Works with both engine paths: ``use_kernels=True`` keeps a resident
+    :class:`~repro.core.LaneSortState` and masks inside the fused kernel;
+    ``use_kernels=False`` masks the per-phase engine step.  Either way a
+    sequence's emitted tracks are bit-identical to running it alone.
+
+    Usage::
+
+        sched = StreamScheduler(engine, num_lanes=4)
+        for name, db, dm in sequences:
+            sched.submit(name, db, dm)
+        for tracks in sched.run():      # submission order
+            ...
+
+    ``submit`` may be called again after ``run`` returns; lane state
+    persists but every admission starts from a masked re-init, so earlier
+    traffic cannot leak into later sequences.
+    """
+
+    def __init__(self, engine: SortEngine, num_lanes: int,
+                 max_dets: Optional[int] = None, chunk: int = 32):
+        if num_lanes < 1:
+            raise ValueError(f"num_lanes must be >= 1, got {num_lanes}")
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.engine = engine
+        self.num_lanes = num_lanes
+        self.max_dets = max_dets or engine.config.max_detections
+        self.chunk = chunk
+
+        self._state = engine.init_ragged(num_lanes)
+        self._pending: collections.deque[_Seq] = collections.deque()
+        self._occupant: list[Optional[_Seq]] = [None] * num_lanes
+        self._cursor = [0] * num_lanes
+        self._ready = ReorderBuffer()
+        self._num_submitted = 0
+
+        # serving counters (benchmarks/ragged.py reads these)
+        self.frames_processed = 0      # real sequence frames stepped
+        self.lane_steps = 0            # lanes x steps actually dispatched
+        self.chunks_run = 0
+        self.admissions: list[tuple[int, int]] = []  # (seq index, step)
+
+        def chunk_fn(state, det, dm, active, reset):
+            def body(st, inp):
+                d, m, a, r = inp
+                # recycle + admitted sequence's first frame: same fused step
+                st = sort_mod.reset_ragged(st, r)
+                return self.engine.step_ragged(st, d, m, a)
+            return jax.lax.scan(body, state, (det, dm, active, reset))
+
+        self._chunk_fn = jax.jit(chunk_fn)
+
+    # --------------------------------------------------------------- intake
+    def submit(self, name: str, det_boxes: np.ndarray,
+               det_mask: np.ndarray) -> int:
+        """Queue one sequence (``det_boxes [F, D_i, 4]``, ``det_mask
+        [F, D_i]``); returns its submission index.  ``D_i`` must not exceed
+        the scheduler's detection budget."""
+        det_boxes = np.asarray(det_boxes, np.float32)
+        det_mask = np.asarray(det_mask, bool)
+        f, d_i = det_mask.shape
+        if d_i > self.max_dets:
+            raise ValueError(
+                f"sequence {name!r} has {d_i} detection slots, scheduler "
+                f"budget is {self.max_dets}")
+        if d_i < self.max_dets:
+            pad = self.max_dets - d_i
+            det_boxes = np.pad(det_boxes, ((0, 0), (0, pad), (0, 0)))
+            det_mask = np.pad(det_mask, ((0, 0), (0, pad)))
+        seq = _Seq(self._num_submitted, name, det_boxes, det_mask)
+        self._num_submitted += 1
+        if f == 0:  # nothing to step; complete immediately (still in order)
+            self._finalize(seq)
+        else:
+            self._pending.append(seq)
+        return seq.index
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._pending) or any(
+            s is not None for s in self._occupant)
+
+    # ------------------------------------------------------------- planning
+    def _plan_chunk(self):
+        """Plan the next ``chunk`` steps of the lane schedule on the host.
+
+        Admission is data-independent (it depends only on queue order and
+        sequence lengths), so the whole chunk — including mid-chunk
+        recycling — is planned before anything is dispatched."""
+        c, l, d = self.chunk, self.num_lanes, self.max_dets
+        det = np.zeros((c, l, d, 4), np.float32)
+        dm = np.zeros((c, l, d), bool)
+        active = np.zeros((c, l), bool)
+        reset = np.zeros((c, l), bool)
+        mapping = []                                  # (t, lane, seq, frame)
+        for t in range(c):
+            for lane in range(l):
+                if self._occupant[lane] is None and self._pending:
+                    self._occupant[lane] = self._pending.popleft()
+                    self._cursor[lane] = 0
+                    reset[t, lane] = True             # recycle in this step
+                    self.admissions.append(
+                        (self._occupant[lane].index,
+                         self.chunks_run * self.chunk + t))
+                seq = self._occupant[lane]
+                if seq is None:
+                    continue
+                k = self._cursor[lane]
+                det[t, lane] = seq.det_boxes[k]
+                dm[t, lane] = seq.det_mask[k]
+                active[t, lane] = True
+                mapping.append((t, lane, seq, k))
+                self._cursor[lane] = k + 1
+                if k + 1 == seq.length:               # lane free next step
+                    self._occupant[lane] = None
+        return det, dm, active, reset, mapping
+
+    # ------------------------------------------------------------ execution
+    def _run_chunk(self) -> list[SequenceTracks]:
+        det, dm, active, reset, mapping = self._plan_chunk()
+        self._state, outs = self._chunk_fn(
+            self._state, jnp.asarray(det), jnp.asarray(dm),
+            jnp.asarray(active), jnp.asarray(reset))
+        boxes = np.asarray(outs.boxes)                # [C, L, T, 4]
+        uid = np.asarray(outs.uid)
+        emit = np.asarray(outs.emit)
+        finished = []
+        for t, lane, seq, k in mapping:
+            # copies, so buffering a row doesn't pin the whole chunk array
+            # until a long-running neighbour sequence finalizes
+            seq.boxes.append(boxes[t, lane].copy())
+            seq.uid.append(uid[t, lane].copy())
+            seq.emit.append(emit[t, lane].copy())
+            if k + 1 == seq.length:
+                finished.append(seq)
+        self.frames_processed += len(mapping)
+        self.lane_steps += self.chunk * self.num_lanes
+        self.chunks_run += 1
+        for seq in finished:
+            self._finalize(seq)
+        return self._ready.pop_ready()
+
+    def _finalize(self, seq: _Seq) -> None:
+        t = self.engine.config.max_trackers
+        self._ready.put(seq.index, SequenceTracks(
+            name=seq.name,
+            boxes=(np.stack(seq.boxes) if seq.boxes
+                   else np.zeros((0, t, 4), np.float32)),
+            uid=(np.stack(seq.uid) if seq.uid
+                 else np.zeros((0, t), np.int32)),
+            emit=(np.stack(seq.emit) if seq.emit
+                  else np.zeros((0, t), bool)),
+        ))
+
+    def run(self) -> list[SequenceTracks]:
+        """Process every submitted sequence to completion (drain), returning
+        their track streams **in submission order**."""
+        results = []
+        while self.busy:
+            results.extend(self._run_chunk())
+        results.extend(self._ready.pop_ready())
+        return results

@@ -1,0 +1,21 @@
+"""Graceful degradation when hypothesis is absent.
+
+The end-to-end suites mix deterministic cases with hypothesis properties
+in one file; a module-level ``pytest.importorskip`` would skip both.
+Importing ``given``/``settings``/``st`` from here keeps collection green
+and the deterministic cases running — only the property tests skip.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(**_kw):
+        return lambda f: pytest.mark.skip("hypothesis not installed")(f)
+
+    class st:  # noqa: N801 — stand-in strategies module
+        integers = lists = sampled_from = staticmethod(
+            lambda *a, **k: None)

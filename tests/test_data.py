@@ -35,6 +35,69 @@ def test_mot15_conf_filter():
     assert rm.sum() == 1
 
 
+def test_mot15_det_file_layout(tmp_path):
+    """write_det_file emits the MOTChallenge det.txt column layout:
+    frame(1-indexed), id=-1, bb_left, bb_top, bb_width, bb_height,
+    conf=1, x=y=z=-1."""
+    det_boxes = np.zeros((2, 2, 4), np.float32)
+    det_boxes[0, 0] = [10.0, 20.0, 40.0, 80.0]      # xyxy -> w=30, h=60
+    det_boxes[1, 1] = [5.0, 5.0, 15.0, 25.0]
+    det_mask = np.array([[True, False], [False, True]])
+    p = tmp_path / "det.txt"
+    mot.write_det_file(p, det_boxes, det_mask)
+    rows = [line.split(",") for line in p.read_text().splitlines()]
+    assert [len(r) for r in rows] == [10, 10]       # masked rows not written
+    frame, tid, x, y, w, h, conf, xx, yy, zz = rows[0]
+    assert (frame, tid, conf, xx, yy, zz) == ("1", "-1", "1", "-1", "-1", "-1")
+    np.testing.assert_allclose([float(v) for v in (x, y, w, h)],
+                               [10.0, 20.0, 30.0, 60.0])
+    assert rows[1][0] == "2"                        # frames are 1-indexed
+
+
+def test_mot15_results_layout(tmp_path):
+    """write_results emits the MOT15 submission layout (same 10 columns,
+    uid in the id slot) for emitted slots only."""
+    boxes = np.zeros((2, 3, 4), np.float32)
+    boxes[0, 1] = [100.0, 50.0, 160.0, 170.0]       # w=60, h=120
+    boxes[1, 0] = [0.0, 0.0, 10.0, 10.0]
+    boxes[1, 2] = [1.0, 2.0, 4.0, 8.0]
+    uids = np.array([[-1, 7, -1], [3, -1, 9]], np.int32)
+    emit = np.array([[False, True, False], [True, False, True]])
+    p = tmp_path / "res.txt"
+    mot.write_results(p, boxes, uids, emit)
+    rows = [line.split(",") for line in p.read_text().splitlines()]
+    assert len(rows) == 3 and all(len(r) == 10 for r in rows)
+    assert [r[0] for r in rows] == ["1", "2", "2"]  # 1-indexed frame order
+    assert [r[1] for r in rows] == ["7", "3", "9"]  # uid column
+    np.testing.assert_allclose([float(v) for v in rows[0][2:6]],
+                               [100.0, 50.0, 60.0, 120.0])
+    assert all(r[6:] == ["1", "-1", "-1", "-1"] for r in rows)
+
+
+def test_mot15_write_read_roundtrip_is_exact_on_clean_values(tmp_path):
+    """write_det_file -> read_det_file preserves boxes exactly when the
+    coordinates survive the 2-decimal text format."""
+    rng = np.random.default_rng(3)
+    det_boxes = np.round(rng.uniform(0, 500, (6, 3, 4)).astype(np.float32),
+                         2)
+    det_boxes[..., 2:] = det_boxes[..., :2] + np.round(
+        rng.uniform(1, 50, (6, 3, 2)).astype(np.float32), 2)
+    det_mask = rng.random((6, 3)) < 0.7
+    det_mask[4] = False                              # empty frame mid-file
+    p = tmp_path / "det.txt"
+    mot.write_det_file(p, det_boxes, det_mask)
+    rb, rm = mot.read_det_file(p)
+    # trailing all-empty frames are unrepresentable in the line format,
+    # leading/mid ones round-trip
+    f = 6 if det_mask[5].any() else int(np.nonzero(det_mask.any(1))[0][-1]) + 1
+    assert rb.shape[0] == f
+    # reader packs each frame's detections contiguously; counts and
+    # within-frame order survive
+    np.testing.assert_array_equal(rm.sum(1), det_mask[:f].sum(1))
+    np.testing.assert_allclose(rb[rm], det_boxes[:f][det_mask[:f]],
+                               atol=0.011)
+
+
 def test_stream_packing_and_buckets():
     seqs = []
     for i, f in enumerate([30, 10, 20, 40]):
@@ -52,6 +115,59 @@ def test_stream_packing_and_buckets():
     assert max(lens0) <= min(lens1)
     rep = stream.replicate(seqs, 7)
     assert len(rep) == 28  # paper §VI: 11 files x 7
+
+
+def test_stream_pack_edge_cases():
+    """Ragged-path regressions: empty input, zero/single-frame sequences,
+    and pad_multiple rounding (surfaced by the ragged scheduler)."""
+    # empty sequence list -> well-formed empty batch
+    empty = stream.pack([], max_dets=5)
+    assert empty.det_boxes.shape == (0, 0, 5, 4)
+    assert empty.det_mask.shape == (0, 0, 5)
+    assert empty.names == ()
+
+    # single-frame and zero-frame sequences pack like any other length
+    one = ("one", np.ones((1, 2, 4), np.float32), np.ones((1, 2), bool))
+    zero = ("zero", np.zeros((0, 2, 4), np.float32), np.zeros((0, 2), bool))
+    batch = stream.pack([one, zero])
+    assert batch.det_boxes.shape == (1, 2, 2, 4)
+    assert batch.frame_valid[:, 0].all() and not batch.frame_valid[:, 1].any()
+
+    # pad_multiple never shrinks an aligned S, rounds an unaligned one up
+    four = [(f"s{i}", np.ones((2, 1, 4), np.float32), np.ones((2, 1), bool))
+            for i in range(4)]
+    assert stream.pack(four, pad_multiple=2).det_boxes.shape[1] == 4
+    assert stream.pack(four[:3], pad_multiple=2).det_boxes.shape[1] == 4
+    assert stream.pack(four[:1], pad_multiple=8).det_boxes.shape[1] == 8
+    with np.testing.assert_raises(ValueError):
+        stream.pack(four, pad_multiple=0)
+
+
+def test_length_buckets_edge_cases():
+    """No empty buckets, ever: fewer sequences than buckets yields one
+    sequence per bucket; an empty input yields no buckets."""
+    assert stream.length_buckets([], num_buckets=4) == []
+    seqs = [(f"s{i}", np.ones((f, 1, 4), np.float32), np.ones((f, 1), bool))
+            for i, f in enumerate([9, 3])]
+    buckets = stream.length_buckets(seqs, num_buckets=4)
+    assert [len(b) for b in buckets] == [1, 1]
+    assert buckets[0][0][0] == "s1"                 # sorted by length
+    with np.testing.assert_raises(ValueError):
+        stream.length_buckets(seqs, num_buckets=0)
+
+
+def test_reorder_buffer_releases_in_submission_order():
+    rb = stream.ReorderBuffer()
+    rb.put(1, "b")
+    rb.put(2, "c")
+    assert rb.pop_ready() == []                     # 0 still outstanding
+    rb.put(0, "a")
+    assert rb.pop_ready() == ["a", "b", "c"]
+    assert len(rb) == 0
+    rb.put(3, "d")
+    assert rb.pop_ready() == ["d"]
+    with np.testing.assert_raises(ValueError):
+        rb.put(3, "dup")                            # already released
 
 
 def test_table_i_constants():

@@ -131,6 +131,43 @@ def test_fused_frame_kernel_matches_oracle():
                                   np.asarray(want[3]))
 
 
+def test_fused_frame_active_mask_matches_oracle():
+    """The ragged-stream lane mask (DESIGN.md §3) inside the Pallas kernel
+    (interpret mode) == oracle, and inactive lanes pass through untouched
+    bit for bit."""
+    rng = np.random.default_rng(17)
+    t, d, s, block_s = 6, 5, 8, 4
+    x = jnp.asarray(rng.normal(size=(7, t, s)).astype(np.float32))
+    a = rng.normal(size=(t, s, 7, 7)).astype(np.float32)
+    p_sq = a @ a.swapaxes(-1, -2) + np.eye(7, dtype=np.float32)
+    p = jnp.asarray(p_sq.reshape(t, s, 49).transpose(2, 0, 1).copy())
+    xy = rng.uniform(0, 200, size=(d, 2, s))
+    wh = rng.uniform(5, 100, size=(d, 2, s))
+    det = jnp.asarray(np.concatenate([xy, xy + wh], 1).astype(np.float32))
+    dm = jnp.asarray((rng.random((d, s)) < 0.8).astype(np.float32))
+    alive = jnp.asarray((rng.random((t, s)) < 0.7).astype(np.float32))
+    act = jnp.asarray((rng.random((1, s)) < 0.5).astype(np.float32))
+
+    got = frame.fused_frame(x, p, det, dm, alive, act, iou_threshold=0.3,
+                            block_s=block_s, interpret=True)
+    want = ref.frame_lane(x, p, det, dm, alive, 0.3, active=act)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    np.testing.assert_array_equal(np.asarray(got[3]) > 0,
+                                  np.asarray(want[3]))
+    # inactive lanes are exact no-ops: state untouched, no matches
+    off = np.asarray(act)[0] == 0
+    np.testing.assert_array_equal(np.asarray(got[0])[:, :, off],
+                                  np.asarray(x)[:, :, off])
+    np.testing.assert_array_equal(np.asarray(got[1])[:, :, off],
+                                  np.asarray(p)[:, :, off])
+    assert (np.asarray(got[2])[:, off] == -1).all()
+    assert (np.asarray(got[3])[:, off] == 0).all()
+
+
 # ----------------------------------------- lane-persistent run() vs legacy
 @pytest.mark.parametrize("num_streams", [1, 3])
 def test_lane_run_bit_identical_to_legacy_lane_math(num_streams):

@@ -1,0 +1,122 @@
+"""Tracking metrics (core/metrics.py) against hand-computed small cases."""
+import numpy as np
+
+from repro.core import metrics
+
+
+def _box(x, y, w=10.0, h=10.0):
+    return [x, y, x + w, y + h]
+
+
+# ---------------------------------------------------------- frame_matches
+def test_frame_matches_perfect():
+    gt = np.array([_box(0, 0), _box(100, 100)], np.float32)
+    out = np.array([_box(100, 100), _box(0, 0)], np.float32)  # any order
+    tp, fp, fn, pairs = metrics.frame_matches(
+        gt, np.ones(2, bool), out, np.ones(2, bool))
+    assert (tp, fp, fn) == (2, 0, 0)
+    assert sorted(pairs) == [(0, 1), (1, 0)]
+
+
+def test_frame_matches_counts_fp_and_fn():
+    gt = np.array([_box(0, 0), _box(100, 100)], np.float32)
+    out = np.array([_box(0, 0), _box(500, 500)], np.float32)  # 1 hit + 1 fp
+    tp, fp, fn, pairs = metrics.frame_matches(
+        gt, np.ones(2, bool), out, np.ones(2, bool))
+    assert (tp, fp, fn) == (1, 1, 1)
+    assert pairs == [(0, 0)]
+
+
+def test_frame_matches_respects_iou_threshold():
+    gt = np.array([_box(0, 0)], np.float32)
+    out = np.array([_box(4, 0)], np.float32)   # IoU = 6/14 ≈ 0.43
+    hit = metrics.frame_matches(gt, np.ones(1, bool), out, np.ones(1, bool),
+                                iou_thr=0.4)
+    miss = metrics.frame_matches(gt, np.ones(1, bool), out, np.ones(1, bool),
+                                 iou_thr=0.5)
+    assert (hit[0], miss[0]) == (1, 0)
+
+
+def test_frame_matches_empty_edges():
+    gt = np.array([_box(0, 0)], np.float32)
+    out = np.array([_box(0, 0), _box(9, 9)], np.float32)
+    none = np.zeros(1, bool)
+    # no gt in frame: every reported box is a false positive
+    assert metrics.frame_matches(gt, none, out, np.ones(2, bool))[:3] \
+        == (0, 2, 0)
+    # no output in frame: every gt is a miss
+    assert metrics.frame_matches(gt, np.ones(1, bool), out,
+                                 np.zeros(2, bool))[:3] == (0, 0, 1)
+    # both empty
+    assert metrics.frame_matches(gt, none, out, np.zeros(2, bool))[:3] \
+        == (0, 0, 0)
+    # masked-out rows must not match even if their boxes align
+    tp, fp, fn, _ = metrics.frame_matches(
+        gt, np.ones(1, bool), out, np.array([False, True]))
+    assert (tp, fp, fn) == (0, 1, 1)
+
+
+# ------------------------------------------------------------------- mota
+def _stack(frames):
+    """[(boxes [K, 4], mask [K])] per frame -> dense [F, K, ...] arrays."""
+    return (np.stack([b for b, _ in frames]).astype(np.float32),
+            np.stack([m for _, m in frames]).astype(bool))
+
+
+def test_mota_perfect_tracking_is_one():
+    f = 4
+    gt_boxes = np.tile(np.array([_box(0, 0), _box(50, 50)], np.float32),
+                       (f, 1, 1))
+    gt_mask = np.ones((f, 2), bool)
+    uids = np.tile(np.array([7, 9], np.int32), (f, 1))
+    m = metrics.mota(gt_boxes, gt_mask, gt_boxes, uids, gt_mask)
+    assert m == {"mota": 1.0, "tp": 8, "fp": 0, "fn": 0,
+                 "id_switches": 0, "num_gt": 8}
+
+
+def test_mota_counts_id_switch():
+    """One object, 3 frames, tracker uid changes 1 -> 2 at frame 2:
+    mota = 1 - (fn + fp + idsw)/num_gt = 1 - 1/3."""
+    f = 3
+    gt_boxes = np.tile(np.array([_box(0, 0)], np.float32), (f, 1, 1))
+    gt_mask = np.ones((f, 1), bool)
+    uids = np.array([[1], [1], [2]], np.int32)
+    m = metrics.mota(gt_boxes, gt_mask, gt_boxes, uids, gt_mask)
+    assert m["id_switches"] == 1 and m["tp"] == 3
+    np.testing.assert_allclose(m["mota"], 1.0 - 1.0 / 3.0)
+
+
+def test_mota_fn_fp_accounting():
+    """2 objects x 2 frames; frame 1 misses object B (fn) and reports a
+    far-away box instead (fp): mota = 1 - 2/4."""
+    gt_boxes, gt_mask = _stack([
+        (np.array([_box(0, 0), _box(50, 50)]), np.array([True, True])),
+        (np.array([_box(0, 0), _box(50, 50)]), np.array([True, True])),
+    ])
+    out_boxes, out_emit = _stack([
+        (np.array([_box(0, 0), _box(50, 50)]), np.array([True, True])),
+        (np.array([_box(0, 0), _box(500, 500)]), np.array([True, True])),
+    ])
+    uids = np.full((2, 2), 0, np.int32)
+    uids[:, 1] = 1
+    m = metrics.mota(gt_boxes, gt_mask, out_boxes, uids, out_emit)
+    assert m["tp"] == 3 and m["fp"] == 1 and m["fn"] == 1
+    assert m["id_switches"] == 0
+    np.testing.assert_allclose(m["mota"], 0.5)
+
+
+def test_mota_empty_frames_and_empty_gt():
+    """Frames where neither gt nor tracker reports anything contribute
+    nothing; an all-empty gt keeps mota finite (num_gt clamp)."""
+    gt_boxes = np.zeros((3, 1, 4), np.float32)
+    gt_mask = np.zeros((3, 1), bool)
+    out_boxes = np.zeros((3, 1, 4), np.float32)
+    out_emit = np.zeros((3, 1), bool)
+    uids = np.zeros((3, 1), np.int32)
+    m = metrics.mota(gt_boxes, gt_mask, out_boxes, uids, out_emit)
+    assert m == {"mota": 1.0, "tp": 0, "fp": 0, "fn": 0,
+                 "id_switches": 0, "num_gt": 0}
+    # empty gt + spurious output -> pure fp, mota clamps on num_gt >= 1
+    out_emit[1, 0] = True
+    m = metrics.mota(gt_boxes, gt_mask, out_boxes, uids, out_emit)
+    assert m["fp"] == 1 and m["mota"] == 0.0

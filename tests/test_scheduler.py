@@ -1,0 +1,196 @@
+"""Online multi-stream scheduler: ragged lane recycling (DESIGN.md §3).
+
+The load-bearing invariant: a sequence multiplexed through recycled lanes
+emits tracks **bit-identical** to running it alone — on both engine paths.
+Plus: FIFO admission-order fairness, in-order drain at shutdown, reuse
+after drain, and degenerate sequences (single-frame, empty).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import SortConfig, SortEngine
+from repro.data.synthetic import SceneConfig, generate_scene
+from repro.serve import StreamScheduler
+
+# one detection budget for every test so jit caches are shared
+MAX_DETS = 7
+_SOLO: dict = {}
+
+
+def _scene(seed, frames):
+    _, _, db, dm = generate_scene(
+        SceneConfig(num_frames=frames, max_objects=4, seed=seed))
+    d = db.shape[1]
+    assert d <= MAX_DETS, d
+    return (np.pad(db, ((0, 0), (0, MAX_DETS - d), (0, 0))),
+            np.pad(dm, ((0, 0), (0, MAX_DETS - d))))
+
+
+def _engine(use_kernels):
+    return SortEngine(SortConfig(max_trackers=8, max_detections=MAX_DETS,
+                                 use_kernels=use_kernels))
+
+
+def _solo_run(eng, db, dm):
+    key = (db.shape[0], eng.config.use_kernels)
+    if key not in _SOLO:
+        _SOLO[key] = jax.jit(eng.run)
+    _, out = _SOLO[key](eng.init(1), jnp.asarray(db)[:, None],
+                        jnp.asarray(dm)[:, None])
+    return out
+
+
+def _assert_tracks_equal_solo(tracks, solo, ctx=""):
+    np.testing.assert_array_equal(tracks.uid, np.asarray(solo.uid[:, 0]),
+                                  err_msg=f"uid {ctx}")
+    np.testing.assert_array_equal(tracks.emit, np.asarray(solo.emit[:, 0]),
+                                  err_msg=f"emit {ctx}")
+    np.testing.assert_array_equal(tracks.boxes, np.asarray(solo.boxes[:, 0]),
+                                  err_msg=f"boxes {ctx}")
+
+
+# ------------------------------------------------------ recycling exactness
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_ragged_mix_bit_identical_to_solo_runs(use_kernels):
+    """Six ragged sequences through a 3-lane scheduler (lanes recycled
+    mid-run) emit tracks bit-identical to per-sequence solo runs."""
+    lengths = [12, 5, 9, 5, 12, 1]
+    seqs = [(f"s{i}", *_scene(i, f)) for i, f in enumerate(lengths)]
+    eng = _engine(use_kernels)
+    sched = StreamScheduler(eng, num_lanes=3, chunk=4)
+    for name, db, dm in seqs:
+        sched.submit(name, db, dm)
+    results = sched.run()
+    assert [r.name for r in results] == [s[0] for s in seqs]
+    assert not sched.busy
+    for (name, db, dm), tracks in zip(seqs, results):
+        assert tracks.num_frames == db.shape[0]
+        _assert_tracks_equal_solo(tracks, _solo_run(eng, db, dm),
+                                  f"{name} uk={use_kernels}")
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_lane_budget_smaller_than_traffic(use_kernels):
+    """More waiting sequences than lanes: a single lane serializes five
+    sequences through the same recycled slot, still bit-exact."""
+    lengths = [5, 9, 1, 12, 5]
+    seqs = [(f"q{i}", *_scene(10 + i, f)) for i, f in enumerate(lengths)]
+    eng = _engine(use_kernels)
+    sched = StreamScheduler(eng, num_lanes=1, chunk=5)
+    for name, db, dm in seqs:
+        sched.submit(name, db, dm)
+    results = sched.run()
+    assert [r.name for r in results] == [s[0] for s in seqs]
+    for (name, db, dm), tracks in zip(seqs, results):
+        _assert_tracks_equal_solo(tracks, _solo_run(eng, db, dm),
+                                  f"{name} uk={use_kernels}")
+
+
+# ------------------------------------------------------- admission fairness
+def test_admission_order_is_fifo():
+    """Lanes admit strictly in submission order, and admission steps are
+    monotone: a later submission never jumps an earlier one."""
+    lengths = [6, 6, 2, 2, 2, 2]
+    eng = _engine(True)
+    sched = StreamScheduler(eng, num_lanes=2, chunk=4)
+    for i, f in enumerate(lengths):
+        sched.submit(f"a{i}", *_scene(i, f))
+    sched.run()
+    admitted = [idx for idx, _ in sched.admissions]
+    steps = [step for _, step in sched.admissions]
+    assert admitted == list(range(len(lengths)))
+    assert steps == sorted(steps)
+    # first two sequences go straight into the two free lanes at step 0
+    assert steps[:2] == [0, 0]
+
+
+def test_recycle_admits_in_the_freed_step():
+    """A lane freed at step t admits the next sequence at step t+1 — the
+    masked re-init and the new sequence's first frame share that step (no
+    idle step between back-to-back sequences on one lane)."""
+    eng = _engine(True)
+    sched = StreamScheduler(eng, num_lanes=1, chunk=8)
+    sched.submit("first", *_scene(0, 5))
+    sched.submit("second", *_scene(1, 3))
+    sched.run()
+    assert sched.admissions == [(0, 0), (1, 5)]
+
+
+# ------------------------------------------------------------------- drain
+def test_drain_emits_in_submission_order():
+    """A short sequence submitted after a long one *finishes* first but is
+    *released* second: drain order is submission order."""
+    eng = _engine(True)
+    long = _scene(3, 14)
+    short = _scene(4, 2)
+    sched = StreamScheduler(eng, num_lanes=2, chunk=4)
+    sched.submit("long", *long)
+    sched.submit("short", *short)
+    results = sched.run()
+    assert [r.name for r in results] == ["long", "short"]
+    _assert_tracks_equal_solo(results[0], _solo_run(eng, *long), "long")
+    _assert_tracks_equal_solo(results[1], _solo_run(eng, *short), "short")
+
+
+def test_scheduler_reusable_after_drain():
+    """submit() after run() keeps working; recycled lanes start every new
+    admission from a masked re-init, so earlier traffic cannot leak."""
+    eng = _engine(True)
+    db, dm = _scene(5, 9)
+    sched = StreamScheduler(eng, num_lanes=2, chunk=4)
+    sched.submit("warm", *_scene(6, 12))
+    sched.run()
+    sched.submit("later", db, dm)
+    (tracks,) = sched.run()
+    _assert_tracks_equal_solo(tracks, _solo_run(eng, db, dm), "later")
+
+
+def test_empty_and_single_frame_sequences():
+    eng = _engine(True)
+    sched = StreamScheduler(eng, num_lanes=2, chunk=4)
+    db1, dm1 = _scene(7, 1)
+    sched.submit("empty", np.zeros((0, MAX_DETS, 4), np.float32),
+                 np.zeros((0, MAX_DETS), bool))
+    sched.submit("one", db1, dm1)
+    results = sched.run()
+    assert [r.name for r in results] == ["empty", "one"]
+    assert results[0].num_frames == 0 and results[0].emit.shape[1] == 8
+    _assert_tracks_equal_solo(results[1], _solo_run(eng, db1, dm1), "one")
+
+
+def test_empty_run_returns_nothing():
+    sched = StreamScheduler(_engine(True), num_lanes=2, chunk=4)
+    assert sched.run() == []
+    assert not sched.busy
+
+
+def test_rejects_oversized_detection_rows():
+    sched = StreamScheduler(_engine(True), num_lanes=1)
+    with pytest.raises(ValueError):
+        sched.submit("big", np.zeros((3, MAX_DETS + 1, 4), np.float32),
+                     np.zeros((3, MAX_DETS + 1), bool))
+
+
+# ------------------------------------------------------- property coverage
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(lengths=st.lists(st.sampled_from([1, 5, 9, 12]), min_size=1,
+                        max_size=7),
+       num_lanes=st.integers(1, 3))
+def test_scheduler_exactness_property(lengths, num_lanes):
+    """Any ragged length mix over any lane budget stays bit-identical to
+    solo runs (fused path; lengths drawn from a fixed set so hypothesis
+    examples share the solo-run jit cache)."""
+    seqs = [(f"p{i}", *_scene(20 + i, f)) for i, f in enumerate(lengths)]
+    eng = _engine(True)
+    sched = StreamScheduler(eng, num_lanes=num_lanes, chunk=4)
+    for name, db, dm in seqs:
+        sched.submit(name, db, dm)
+    results = sched.run()
+    assert [r.name for r in results] == [s[0] for s in seqs]
+    for (name, db, dm), tracks in zip(seqs, results):
+        _assert_tracks_equal_solo(tracks, _solo_run(eng, db, dm), name)
