@@ -1,8 +1,13 @@
-"""Ablation: Hungarian (paper) vs greedy association.
+"""Ablation: Hungarian (paper) vs greedy association, on both engine paths.
 
-The paper commits to the Hungarian method; this quantifies what optimality
-buys on Table-I-shaped workloads of increasing difficulty.  Run via
-``benchmarks.run`` (appended section) or standalone.
+The paper commits to the Hungarian method; PR 3 made it available inside
+the fused lane-resident frame step (DESIGN.md §6), so the ablation now
+spans a 2x2 grid — (unfused | fused) x (hungarian | greedy) — and doubles
+as the Table IV/V analogue for the association stage: per-config frame
+latency plus the per-frame dispatch accounting of each path.
+
+Run via ``benchmarks.run`` (appended section) or standalone; CI smokes it
+with a small ``num_frames`` so the fused-Hungarian rows cannot rot.
 """
 from __future__ import annotations
 
@@ -13,29 +18,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SortConfig, SortEngine, metrics
-from repro.core.greedy import greedy_iou_fn_for_engine
 from repro.data.synthetic import SceneConfig, generate_scene
 
+# (row tag, use_kernels, assoc) — the grid the ISSUE's Table IV/V analogue
+# asks for: fused-Hungarian vs unfused-Hungarian vs fused-greedy (plus the
+# original unfused-greedy baseline for the full square).
+CONFIGS = (
+    ("unfused_hungarian", False, "hungarian"),
+    ("unfused_greedy", False, "greedy"),
+    ("fused_hungarian", True, "hungarian"),
+    ("fused_greedy", True, "greedy"),
+)
 
-def run(seed=0):
+
+def _dispatch_note(use_kernels: bool, assoc: str) -> str:
+    """Per-frame device dispatch accounting (DESIGN.md §4/§6)."""
+    if not use_kernels:
+        return "dispatches/frame=per-phase XLA ops (layout round-trips)"
+    on_tpu = jax.default_backend() == "tpu"
+    if not on_tpu:
+        return "dispatches/frame=1 XLA program (cpu lane oracle)"
+    if assoc == "hungarian":
+        return "dispatches/frame=1 pallas_call + jitted JV stage (no host)"
+    return "dispatches/frame=1 pallas_call (greedy in-kernel)"
+
+
+def run(seed: int = 0, num_frames: int = 150):
     rows = []
     for difficulty, kw in (
             ("easy", dict(miss_rate=0.02, fp_rate=0.05, det_noise=1.0,
                           max_objects=6)),
             ("dense", dict(miss_rate=0.1, fp_rate=0.5, det_noise=4.0,
                            max_objects=12))):
-        cfg = SceneConfig(num_frames=150, seed=seed, **kw)
+        cfg = SceneConfig(num_frames=num_frames, seed=seed, **kw)
         gt_boxes, gt_mask, db, dm = generate_scene(cfg)
         d = db.shape[1]
-        for name, assoc in (("hungarian", None),
-                            ("greedy", greedy_iou_fn_for_engine(0.3))):
-            eng = SortEngine(SortConfig(max_trackers=24, max_detections=d),
-                             assoc_fn=assoc)
+        dbj = jnp.asarray(db[:, None])
+        dmj = jnp.asarray(dm[:, None])
+        for tag, use_kernels, assoc in CONFIGS:
+            eng = SortEngine(SortConfig(max_trackers=24, max_detections=d,
+                                        use_kernels=use_kernels,
+                                        assoc=assoc))
             run_fn = jax.jit(eng.run)
-            st = eng.init(1)
-            dbj = jnp.asarray(db[:, None])
-            dmj = jnp.asarray(dm[:, None])
-            jax.block_until_ready(run_fn(st, dbj, dmj))
+            jax.block_until_ready(run_fn(eng.init(1), dbj, dmj))
             t0 = time.perf_counter()
             _, out = run_fn(eng.init(1), dbj, dmj)
             jax.block_until_ready(out.boxes)
@@ -43,9 +68,15 @@ def run(seed=0):
             m = metrics.mota(gt_boxes, gt_mask, np.asarray(out.boxes[:, 0]),
                              np.asarray(out.uid[:, 0]),
                              np.asarray(out.emit[:, 0]))
-            rows.append((f"ablation/{difficulty}_{name}_mota", m["mota"],
-                         f"idsw={m['id_switches']} "
-                         f"us_per_frame={dt / 150 * 1e6:.0f}"))
+            rows.append((f"ablation/{difficulty}_{tag}_mota", m["mota"],
+                         f"idsw={m['id_switches']}"))
+            rows.append((f"ablation/{difficulty}_{tag}_us_per_frame",
+                         dt / num_frames * 1e6,
+                         f"mota={m['mota']:.3f} "
+                         + _dispatch_note(use_kernels, assoc)))
     return rows
 
 
+if __name__ == "__main__":
+    for name, value, derived in run():
+        print(f"{name},{value:.4f},{derived}")

@@ -9,10 +9,10 @@ Also the Table IV analogue (dispatch accounting, see DESIGN.md §4): frame
 latency for the legacy per-phase engine vs the lane-persistent fused path
 (``use_kernels=True``), which collapses the predict / IoU / update
 dispatches and their layout round-trips into one ``fused_frame`` call per
-frame on TPU.  Note the two engine rows differ in association too
-(Hungarian vs greedy, DESIGN.md §5), so off-TPU — where both compile to
-one XLA program — the comparison isolates layout residency + association,
-not launch overhead.
+frame on TPU.  Since PR 3 both engine rows run the same paper-exact
+Hungarian association (DESIGN.md §6), so the comparison isolates layout
+residency (+ launch overhead on TPU) — the association-algorithm axis
+moved to ``benchmarks/association_ablation.py``.
 """
 from __future__ import annotations
 
@@ -70,14 +70,15 @@ def run(num_streams: int = 64, num_frames: int = 120, seed: int = 0,
 
     # Table IV analogue: per-frame kernel dispatches on the filter hot path.
     # Paper: ~15 BLAS calls per tracker update; per-phase Pallas kernels: 3
-    # (predict, IoU, update) + layout round-trips; fused frame kernel: 1.
-    # The dispatch counts describe the TPU execution; off-TPU the fused
-    # path runs the same-math jnp oracle (one XLA program either way), so
-    # there the row isolates the layout-residency + greedy-vs-Hungarian
-    # difference, not kernel-launch overhead.
+    # (predict, IoU, update) + layout round-trips; fused frame kernel: 1
+    # (+ the jitted lane-batched JV stage feeding it — same device program,
+    # DESIGN.md §6).  The dispatch counts describe the TPU execution;
+    # off-TPU the fused path runs the same-math jnp oracle (one XLA
+    # program either way), so there the row isolates layout residency,
+    # not kernel-launch overhead — association is Hungarian on both rows.
     on_tpu = jax.default_backend() == "tpu"
     fused_note = ("dispatches/frame=1" if on_tpu
-                  else "cpu-oracle (greedy assoc, resident lane layout)")
+                  else "cpu-oracle (hungarian assoc, resident lane layout)")
     return [
         ("tableV/ref_python_us_per_frame", t_ref * 1e6,
          "dispatches/frame~15 tiny BLAS per tracker (paper Table IV)"),

@@ -50,7 +50,14 @@ def main():
     ap.add_argument("--fused", action="store_true",
                     help="lane-persistent fused frame path "
                          "(SortConfig.use_kernels=True): one kernel "
-                         "dispatch per frame, greedy association")
+                         "dispatch per frame")
+    ap.add_argument("--assoc", choices=("hungarian", "greedy"),
+                    default="hungarian",
+                    help="association algorithm (DESIGN.md §6): "
+                         "'hungarian' is the paper's optimal assignment "
+                         "(on the fused path its JV solve runs as a "
+                         "jitted lane-batched stage); 'greedy' is the "
+                         "cheaper in-kernel best-first matcher")
     args = ap.parse_args()
 
     seqs = load_or_synthesize(args.det_dir)
@@ -60,7 +67,7 @@ def main():
 
     d = max(db.shape[1] for _, db, _ in seqs)
     eng = SortEngine(SortConfig(max_trackers=16, max_detections=d,
-                                use_kernels=args.fused))
+                                use_kernels=args.fused, assoc=args.assoc))
     sched = StreamScheduler(eng, num_lanes=args.lanes, max_dets=d,
                             chunk=args.chunk)
 
@@ -73,11 +80,11 @@ def main():
                           tracks.boxes, tracks.uid, tracks.emit)
         total_frames += tracks.num_frames
     dt = time.perf_counter() - t_start
-    mode = "fused lane-persistent" if args.fused else "per-phase"
-    util = sched.frames_processed / max(sched.lane_steps, 1)
+    mode = ("fused lane-persistent" if args.fused else "per-phase") \
+        + f" / {args.assoc}"
     print(f"{len(seqs)} sequences, {total_frames} frames in {dt:.2f}s "
           f"-> {total_frames / dt:,.0f} FPS (incl. compile, {mode}, "
-          f"{args.lanes} lanes at {util:.0%} utilization)  "
+          f"{args.lanes} lanes at {sched.utilization:.0%} utilization)  "
           f"results in {args.out}")
 
 

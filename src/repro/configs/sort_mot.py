@@ -17,8 +17,17 @@ class SortServiceConfig:
 
 FULL = SortServiceConfig(
     sort=SortConfig(max_trackers=16, max_detections=16, iou_threshold=0.3,
-                    max_age=1, min_hits=3))
+                    max_age=1, min_hits=3, assoc="hungarian"))
+
+# Lane-resident fused serving path, paper-exact: one kernel dispatch per
+# frame with the Hungarian JV solve as its jitted lane-batched feed stage
+# (DESIGN.md §6).  Swap assoc="greedy" to trade optimality for the cheaper
+# in-kernel matcher (benchmarks/association_ablation.py quantifies both).
+FUSED = SortServiceConfig(
+    sort=SortConfig(max_trackers=16, max_detections=16, iou_threshold=0.3,
+                    max_age=1, min_hits=3, assoc="hungarian",
+                    use_kernels=True))
 
 SMOKE = SortServiceConfig(
-    sort=SortConfig(max_trackers=8, max_detections=8),
+    sort=SortConfig(max_trackers=8, max_detections=8, assoc="hungarian"),
     streams_per_chip=8, frames_per_segment=16)

@@ -43,13 +43,47 @@ def associate(det_boxes: jnp.ndarray, det_mask: jnp.ndarray,
     det_boxes ``[..., D, 4]`` xyxy; trk_boxes ``[..., T, 4]`` xyxy (predicted);
     masks flag valid rows.  ``iou_fn`` allows swapping in the Pallas kernel.
     """
-    d = det_boxes.shape[-2]
-    t = trk_boxes.shape[-2]
-    n = max(d, t)
     iou = (iou_fn or bbox.iou_matrix)(det_boxes, trk_boxes)  # [..., D, T]
+    return associate_from_iou(iou, det_mask, trk_mask, iou_threshold)
+
+
+def _all_unmatched(iou: jnp.ndarray, det_mask: jnp.ndarray,
+                   trk_mask: jnp.ndarray) -> Association:
+    """Degenerate frame (``D == 0`` or ``T == 0``): nothing can match, and
+    the gather/scatter inversion below would index into a size-0 axis."""
+    d, t = iou.shape[-2], iou.shape[-1]
+    batch = iou.shape[:-2]
+    return Association(
+        det_to_trk=jnp.full(batch + (d,), -1, jnp.int32),
+        trk_to_det=jnp.full(batch + (t,), -1, jnp.int32),
+        matched_det=jnp.zeros(batch + (d,), bool),
+        matched_trk=jnp.zeros(batch + (t,), bool),
+        unmatched_det=jnp.broadcast_to(det_mask, batch + (d,)),
+        unmatched_trk=jnp.broadcast_to(trk_mask, batch + (t,)),
+        iou=iou)
+
+
+def associate_from_iou(iou: jnp.ndarray, det_mask: jnp.ndarray,
+                       trk_mask: jnp.ndarray,
+                       iou_threshold: float = 0.3) -> Association:
+    """The solve + gate + invert core of :func:`associate`, starting from a
+    precomputed IoU matrix ``[..., D, T]`` (batch leading)."""
+    d, t = iou.shape[-2], iou.shape[-1]
+    if d == 0 or t == 0:  # static shapes: zero tracker slots / detections
+        return _all_unmatched(iou, det_mask, trk_mask)
+    n = max(d, t)
     cost = -iou
     col4row = hungarian.solve_masked(cost, det_mask, trk_mask, n)  # [..., n]
+    return _gate_and_invert(iou, det_mask, trk_mask, col4row, iou_threshold)
 
+
+def _gate_and_invert(iou, det_mask, trk_mask, col4row,
+                     iou_threshold) -> Association:
+    """Shared gate + inversion: validate each detection's solver column
+    (in-range, valid tracker, IoU above threshold) and scatter the matching
+    into tracker-major form.  Both layouts' entry points funnel here, so
+    their match decisions are identical by construction."""
+    d, t = iou.shape[-2], iou.shape[-1]
     det_idx = jnp.arange(d)
     assigned_col = col4row[..., :d]                        # [..., D]
     in_range = assigned_col < t
@@ -79,6 +113,37 @@ def associate(det_boxes: jnp.ndarray, det_mask: jnp.ndarray,
     unmatched_trk = trk_mask & ~matched_trk
     return Association(det_to_trk, trk_to_det, matched_det, matched_trk,
                        unmatched_det, unmatched_trk, iou)
+
+
+def associate_lane(iou: jnp.ndarray, det_mask: jnp.ndarray,
+                   trk_mask: jnp.ndarray, iou_threshold: float = 0.3):
+    """Hungarian association on the kernels' lane layout (DESIGN.md §6).
+
+    ``iou [D, T, *lanes]``, ``det_mask [D, *lanes]``, ``trk_mask
+    [T, *lanes]`` (bool or 0/1 float) -> ``(trk_to_det [T, *lanes] int32,
+    matched_det [D, *lanes] bool)`` — the inverted form the fused SORT
+    frame step consumes (the same pair ``core.greedy.greedy_assign_lane``
+    returns, so the two association modes are drop-in interchangeable).
+
+    One transpose to the batch layout, then the identical
+    solve + gate + invert core as :func:`associate` (the per-lane JV
+    problems are what :func:`repro.core.hungarian.solve_masked_lane`
+    exposes standalone), so gating and tie-breaking are *identical* to
+    the non-fused engine path — the fused-Hungarian bit-parity guarantee
+    of ``tests/test_oracle_parity.py``.
+    """
+    d, t = iou.shape[0], iou.shape[1]
+    lanes = iou.shape[2:]
+    if d == 0 or t == 0:
+        return (jnp.full((t,) + lanes, -1, jnp.int32),
+                jnp.zeros((d,) + lanes, bool))
+    iou_b = jnp.moveaxis(iou.reshape(d, t, -1), -1, 0)          # [L, D, T]
+    dm_b = jnp.moveaxis((det_mask > 0).reshape(d, -1), -1, 0)   # [L, D]
+    tm_b = jnp.moveaxis((trk_mask > 0).reshape(t, -1), -1, 0)   # [L, T]
+    a = associate_from_iou(iou_b, dm_b, tm_b, iou_threshold)
+    trk_to_det = jnp.moveaxis(a.trk_to_det, 0, -1).reshape((t,) + lanes)
+    matched_det = jnp.moveaxis(a.matched_det, 0, -1).reshape((d,) + lanes)
+    return trk_to_det, matched_det
 
 
 def _scatter_last(buf: jnp.ndarray, idx: jnp.ndarray, src: jnp.ndarray) -> jnp.ndarray:

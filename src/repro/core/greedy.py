@@ -25,6 +25,8 @@ def greedy_assign(iou: jnp.ndarray, det_mask: jnp.ndarray,
     """
     d, t = iou.shape[-2], iou.shape[-1]
     batch = iou.shape[:-2]
+    if d == 0 or t == 0:  # degenerate frame: argmax over a size-0 axis
+        return jnp.full(batch + (d,), -1, jnp.int32)
     valid = (det_mask[..., :, None] & trk_mask[..., None, :]
              & (iou >= iou_threshold))
     score = jnp.where(valid, iou, -1.0)
@@ -104,8 +106,10 @@ def _set_at(buf, idx, val):
 
 
 def greedy_iou_fn_for_engine(iou_threshold: float = 0.3):
-    """Adapter producing an ``associate``-compatible replacement (used by
-    the ablation benchmark; the SortEngine path stays Hungarian)."""
+    """Adapter producing an ``associate``-compatible replacement — the
+    non-fused engine's association when ``SortConfig.assoc == "greedy"``
+    (the fused path uses :func:`greedy_assign_lane` in-kernel instead,
+    DESIGN.md §6)."""
     from . import association
 
     def associate_greedy(det_boxes, det_mask, trk_boxes, trk_mask,

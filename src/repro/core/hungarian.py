@@ -152,3 +152,29 @@ def solve_masked(cost: jnp.ndarray, row_mask: jnp.ndarray, col_mask: jnp.ndarray
     """
     padded = pad_cost_matrix(cost, row_mask, col_mask, n)
     return solve_batched(padded)
+
+
+def solve_masked_lane(cost: jnp.ndarray, row_mask: jnp.ndarray,
+                      col_mask: jnp.ndarray, n: int) -> jnp.ndarray:
+    """:func:`solve_masked` for the kernels' *lane layout* (DESIGN.md §2):
+    the batch lives on the trailing lane axes, the tiny matrix on the
+    leading ones — ``cost [R, C, *lanes]``, ``row_mask [R, *lanes]``,
+    ``col_mask [C, *lanes]`` -> ``col4row [n, *lanes] int32``.
+
+    This is the standalone lane-level solver API for the fused frame
+    step's layout: the ``[D, T, S]`` IoU cost built from the resident
+    ``[7, B]`` state solves one tiny problem per lane, never splitting a
+    matrix — the paper's batching argument.  Per-lane results are
+    bit-identical to :func:`solve_masked` on the transposed batch (the
+    same per-problem op sequence, only the batch axis moves;
+    ``tests/test_hungarian.py`` locks this down), which is what lets the
+    fused-Hungarian engine path (``core.association.associate_lane``, the
+    same transpose + the same batch core) match the unfused one exactly.
+    """
+    r, c = cost.shape[0], cost.shape[1]
+    lanes = cost.shape[2:]
+    cost_b = jnp.moveaxis(cost.reshape(r, c, -1), -1, 0)       # [L, R, C]
+    rm_b = jnp.moveaxis((row_mask > 0).reshape(r, -1), -1, 0)  # [L, R]
+    cm_b = jnp.moveaxis((col_mask > 0).reshape(c, -1), -1, 0)  # [L, C]
+    out = solve_masked(cost_b, rm_b, cm_b, n)                  # [L, n]
+    return jnp.moveaxis(out, 0, -1).reshape((n,) + lanes)

@@ -86,12 +86,13 @@ class KalmanBoxTracker:
 class Sort:
     """Per-stream SORT, Bewley-reference semantics.
 
-    ``assoc`` selects the association oracle: ``"hungarian"`` (Bewley's
-    optimal assignment — what the batched engine's default path runs) or
-    ``"greedy"`` (global best-first with the same det-major tie-breaking
-    as ``core.greedy.greedy_assign`` — what the fused lane path runs), so
-    both engine paths have an end-to-end numpy ground truth
-    (``tests/test_oracle_parity.py``).
+    ``assoc`` selects the association oracle, mirroring
+    ``SortConfig.assoc`` (DESIGN.md §6): ``"hungarian"`` (Bewley's optimal
+    assignment via scipy — the default on both engine paths, including
+    the fused lane path's JV stage) or ``"greedy"`` (global best-first
+    with the same det-major tie-breaking as ``core.greedy.greedy_assign``),
+    so every path x algorithm combination has an end-to-end numpy ground
+    truth (``tests/test_oracle_parity.py``).
     """
 
     def __init__(self, max_age=1, min_hits=3, iou_threshold=0.3,

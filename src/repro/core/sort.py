@@ -19,11 +19,18 @@ Lifecycle constants follow Bewley's reference implementation
 Two execution paths (selected by ``SortConfig.use_kernels``):
 
 * ``False`` — legacy per-phase path: engine-layout state
-  (``[S, T, ...]``), Hungarian association, injectable per-phase kernels.
+  (``[S, T, ...]``), injectable per-phase kernels.
 * ``True`` — lane-persistent fused path: state is converted once per
   ``run()`` to :class:`LaneSortState` (the Pallas kernels' lane layout,
   DESIGN.md §2.2) and every frame is a single fused
-  predict/IoU/greedy/update dispatch (``repro.kernels.frame``).
+  predict/IoU/assign/update dispatch (``repro.kernels.frame``).
+
+Both paths run either association algorithm (``SortConfig.assoc``,
+DESIGN.md §6): ``"hungarian"`` — the paper's optimal assignment, the
+default — or ``"greedy"`` best-first matching.  On the fused path the
+Hungarian JV solve runs as a jitted lane-batched stage feeding the single
+kernel dispatch (``kernels/ops.py::frame_step``), so ``use_kernels=True``
+no longer trades the paper's algorithm for speed.
 """
 from __future__ import annotations
 
@@ -33,7 +40,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from . import association, bbox, kalman, slots
+from . import association, bbox, greedy, kalman, slots
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,11 +51,16 @@ class SortConfig:
     max_age: int = 1
     min_hits: int = 3
     dtype: str = "float32"
+    # association algorithm (DESIGN.md §6): "hungarian" — optimal
+    # assignment, the paper's algorithm and the default — or "greedy"
+    # best-first matching (cheaper, near-identical on sparse scenes).
+    # Honored by both execution paths; on the fused path the Hungarian
+    # solve runs as a jitted lane-batched stage feeding the kernel.
+    assoc: str = "hungarian"
     # True -> lane-persistent fused frame path: state stays in the kernels'
     # lane layout across the whole run and every frame is one fused
-    # predict/IoU/greedy/update dispatch (repro.kernels.frame).  Greedy
-    # association only; for Hungarian keep False (optionally with injected
-    # per-phase kernel fns from repro.kernels.ops.engine_fns).
+    # predict/IoU/assign/update dispatch (repro.kernels.frame), with the
+    # association algorithm chosen by `assoc` above.
     use_kernels: bool = False
     # tracker-lane block for the fused path; streams per kernel block is
     # block_b // max_trackers (DESIGN.md §2.3) — the default gives a full
@@ -244,6 +256,10 @@ class SortEngine:
                  update_fn: Optional[Callable] = None,
                  iou_fn: Optional[Callable] = None,
                  assoc_fn: Optional[Callable] = None):
+        if config.assoc not in ("hungarian", "greedy"):
+            raise ValueError(
+                f"SortConfig.assoc must be 'hungarian' or 'greedy', "
+                f"got {config.assoc!r}")
         if config.use_kernels and (predict_fn or update_fn or iou_fn
                                    or assoc_fn):
             raise ValueError(
@@ -261,7 +277,12 @@ class SortEngine:
         self._update = update_fn or (
             lambda x, p, z, m: kalman.masked_update(x, p, z, m, self.params))
         self._iou = iou_fn or bbox.iou_matrix
-        self._assoc = assoc_fn or association.associate
+        if assoc_fn is not None:          # explicit injection wins
+            self._assoc = assoc_fn
+        elif config.assoc == "greedy":
+            self._assoc = greedy.greedy_iou_fn_for_engine(config.iou_threshold)
+        else:
+            self._assoc = association.associate
 
     # ------------------------------------------------------------------ state
     def init(self, num_streams: int) -> SortState:
@@ -297,7 +318,7 @@ class SortEngine:
         x, p = self._predict(x, p)
         trk_boxes = bbox.z_to_xyxy(x[..., :4])
 
-        # 2. associate (Hungarian by default; injectable, e.g. greedy)
+        # 2. associate (config.assoc: Hungarian by default; injectable)
         assoc = self._assoc(det_boxes, det_mask, trk_boxes,
                             pool.alive, cfg.iou_threshold,
                             iou_fn=self._iou)
@@ -337,8 +358,10 @@ class SortEngine:
                   ) -> tuple[LaneSortState, SortOutput]:
         """One frame entirely in the persistent lane layout.
 
-        Predict -> IoU -> greedy association -> masked update run as a
-        single fused dispatch (``repro.kernels.ops.frame_step``); tracker
+        Predict -> IoU -> association (``config.assoc``, DESIGN.md §6) ->
+        masked update run as a single fused dispatch
+        (``repro.kernels.ops.frame_step``; with ``assoc="hungarian"`` the
+        lane-batched JV solve stage feeds that dispatch); tracker
         lifecycle, births, and emit are lane-major integer bookkeeping.
         Only the per-frame *outputs* (boxes/uid/emit — 6 scalars per slot,
         not the 49-entry covariance) leave the lane layout.
@@ -366,12 +389,13 @@ class SortEngine:
         act = (None if stream_active is None
                else jnp.pad(stream_active, ((0, sp - s),)))      # [Sp] bool
 
-        # 1-3. fused predict + IoU + greedy + masked update (one dispatch)
+        # 1-3. fused predict + IoU + assign + masked update (one dispatch;
+        # the Hungarian mode's JV solve is a jitted stage feeding it)
         x3, p3, trk_to_det, matched_det = kops.frame_step(
             x3, p3, det_l, dm_l.astype(dt), alive.astype(dt),
             None if act is None else act.astype(dt)[None],
             iou_threshold=cfg.iou_threshold, block_s=self._block_s,
-            mode=frame_mode)
+            mode=frame_mode, assoc=cfg.assoc)
 
         # 4a. age & kill (elementwise — runs lane-major as-is)
         pool = slots.tick(lane.pool, trk_to_det >= 0, cfg.max_age)

@@ -44,12 +44,19 @@ def read_det_file(path_or_buf, min_conf: float = 0.0,
             raw = fh.read()
     else:
         raw = path_or_buf.read()
+    if not raw.strip():
+        # empty / whitespace-only det file (a sequence with no detections,
+        # or write_det_file of a zero-frame batch): np.loadtxt would choke
+        # parsing it, so short-circuit to the well-formed zero-frame batch.
+        return np.zeros((0, 1, 4), np.float32), np.zeros((0, 1), bool)
     rows = np.loadtxt(io.StringIO(raw), delimiter=",", ndmin=2)
     if rows.size == 0:
         return np.zeros((0, 1, 4), np.float32), np.zeros((0, 1), bool)
     frames = rows[:, 0].astype(int)
     conf_ok = rows[:, 6] >= min_conf
     rows, frames = rows[conf_ok], frames[conf_ok]
+    if frames.size == 0:  # every row filtered out by min_conf
+        return np.zeros((0, 1, 4), np.float32), np.zeros((0, 1), bool)
     f_max = int(frames.max())
     counts = np.bincount(frames - 1, minlength=f_max)
     d = int(counts.max()) if max_dets is None else max_dets

@@ -20,10 +20,15 @@ VMEM per grid step at T=D=16, block_s=128:
 (7+49)*16*128*4B (state in+out, x2) + 16*4*128*4B*2 (boxes) +
 16*16*128*4B (IoU) ≈ 5.4 MiB — comfortably under the ~16 MiB budget.
 
-Association is greedy (``core.greedy.greedy_assign_lane``) because the
-Hungarian solver's data-dependent augmenting paths do not vectorize over
-lanes; Hungarian remains the injectable non-fused fallback in
-``core.sort.SortEngine``.
+Association (DESIGN.md §6): greedy (``core.greedy.greedy_assign_lane``)
+runs *inside* the kernel — ``min(D, T)`` masked argmax rounds are plain
+vector algebra.  The Hungarian solver's data-dependent augmenting paths do
+not vectorize over lanes, so the paper-exact fused path
+(``kernels/ops.py::frame_step(assoc="hungarian")``) instead solves the
+lane-batched JV stage in jitted jnp *between* dispatch and kernel — the
+precomputed ``trk_to_det`` enters this kernel as one extra ``[T, S]``
+int32 operand and the predict/update phases stay resident: the ``[49, B]``
+covariance still makes exactly one HBM round-trip per frame.
 """
 from __future__ import annotations
 
@@ -40,12 +45,14 @@ DEFAULT_BLOCK_S = 128
 
 
 def _frame_kernel(x_ref, p_ref, det_ref, dm_ref, alive_ref, *refs,
-                  iou_threshold: float, has_active: bool):
-    active = refs[0][...] if has_active else None
-    xo_ref, po_ref, t2d_ref, md_ref = refs[1:] if has_active else refs
+                  iou_threshold: float, has_active: bool, has_assoc: bool):
+    refs = list(refs)
+    active = refs.pop(0)[...] if has_active else None
+    t2d_in = refs.pop(0)[...] if has_assoc else None
+    xo_ref, po_ref, t2d_ref, md_ref = refs
     x, p, t2d, md = ref.frame_lane(
         x_ref[...], p_ref[...], det_ref[...], dm_ref[...], alive_ref[...],
-        iou_threshold, active=active)
+        iou_threshold, active=active, trk_to_det=t2d_in)
     xo_ref[...] = x
     po_ref[...] = p
     t2d_ref[...] = t2d
@@ -54,8 +61,8 @@ def _frame_kernel(x_ref, p_ref, det_ref, dm_ref, alive_ref, *refs,
 
 @functools.partial(jax.jit,
                    static_argnames=("iou_threshold", "block_s", "interpret"))
-def fused_frame(x, p, det, det_mask, alive, stream_active=None, *,
-                iou_threshold: float = 0.3,
+def fused_frame(x, p, det, det_mask, alive, stream_active=None,
+                trk_to_det=None, *, iou_threshold: float = 0.3,
                 block_s: int = DEFAULT_BLOCK_S, interpret: bool = False):
     """One SORT frame for every stream in a single dispatch.
 
@@ -64,8 +71,13 @@ def fused_frame(x, p, det, det_mask, alive, stream_active=None, *,
     ``S % block_s == 0``.  ``stream_active [1, S]`` 0/1 float (optional)
     is the ragged-stream lane mask (DESIGN.md §3): inactive lanes pass
     through the kernel as exact no-ops, so finished sequences cost no
-    extra dispatch while they wait for a recycled admission.  Returns
-    ``(x, p, trk_to_det [T, S] int32, matched_det [D, S] int32)``.
+    extra dispatch while they wait for a recycled admission.
+
+    ``trk_to_det [T, S] int32`` (optional) is a precomputed, already-gated
+    assignment (DESIGN.md §6): the kernel then skips its in-VMEM IoU +
+    greedy phases and runs predict -> gather-by-assignment -> masked
+    update — the fused-Hungarian path, whose JV solve stage ran outside.
+    Returns ``(x, p, trk_to_det [T, S] int32, matched_det [D, S] int32)``.
     """
     t, s = x.shape[1], x.shape[2]
     d = det.shape[0]
@@ -80,10 +92,14 @@ def fused_frame(x, p, det, det_mask, alive, stream_active=None, *,
     if stream_active is not None:
         operands.append(stream_active)
         in_specs.append(lane_spec(1, block_s))
+    if trk_to_det is not None:
+        operands.append(trk_to_det)
+        in_specs.append(lane_spec(t, block_s))
 
     return pl.pallas_call(
         functools.partial(_frame_kernel, iou_threshold=iou_threshold,
-                          has_active=stream_active is not None),
+                          has_active=stream_active is not None,
+                          has_assoc=trk_to_det is not None),
         grid=(s // block_s,),
         in_specs=in_specs,
         out_specs=[spec3(7, t), spec3(49, t),

@@ -100,31 +100,69 @@ def iou(det_boxes, trk_boxes, *, block_b: int = _iou_kernel.DEFAULT_BLOCK_B,
 def frame_step(x, p, det, det_mask, alive, stream_active=None, *,
                iou_threshold: float = 0.3,
                block_s: int = _frame.DEFAULT_BLOCK_S,
-               mode: str = "auto"):
-    """Single-dispatch fused frame (predict -> IoU -> greedy -> update).
+               mode: str = "auto", assoc: str = "greedy"):
+    """Single-dispatch fused frame (predict -> IoU -> assign -> update).
 
     All operands already in the persistent lane layout (``x [7, T, S]``,
     ``p [49, T, S]``, ``det [D, 4, S]``, masks ``[*, S]`` 0/1 float) —
     no per-call conversion.  ``stream_active [1, S]`` 0/1 float (optional)
     marks which lanes carry a live ragged sequence this frame; inactive
-    lanes are exact in-kernel no-ops (DESIGN.md §3).  ``mode``:
+    lanes are exact in-kernel no-ops (DESIGN.md §3).
+
+    ``assoc`` (DESIGN.md §6): ``"greedy"`` matches inside the kernel;
+    ``"hungarian"`` (the paper's algorithm) solves the lane-batched JV
+    assignment as a jitted jnp stage *before* the kernel —
+    :func:`_hungarian_stage` recomputes the cheap predicted means/IoU,
+    gates, and hands the kernel a precomputed ``trk_to_det``, so the
+    ``[49, B]`` covariance still enters exactly one ``pallas_call`` per
+    frame (no host round-trip, no state re-dispatch).
+
+    ``mode``:
 
     * ``"auto"``   — compiled Pallas kernel on TPU, lane-layout oracle
       elsewhere (interpret mode pays a Python-per-grid-step tax that would
       dwarf the frame; the oracle is the same math).
     * ``"pallas"`` / ``"interpret"`` / ``"ref"`` — force a backend.
     """
+    if assoc not in ("greedy", "hungarian"):
+        raise ValueError(f"unknown assoc {assoc!r}")
     if mode == "auto":
         mode = "pallas" if _on_tpu() else "ref"
     if mode == "ref":
         x, p, t2d, md = ref.frame_lane(x, p, det, det_mask, alive,
-                                       iou_threshold, active=stream_active)
+                                       iou_threshold, active=stream_active,
+                                       assoc=assoc)
         return x, p, t2d, md
+    t2d_pre = (None if assoc != "hungarian"
+               else _hungarian_stage(x, det, det_mask, alive, stream_active,
+                                     iou_threshold))
     x, p, t2d, md = _frame.fused_frame(
-        x, p, det, det_mask, alive, stream_active,
+        x, p, det, det_mask, alive, stream_active, t2d_pre,
         iou_threshold=iou_threshold,
         block_s=block_s, interpret=(mode == "interpret"))
     return x, p, t2d, md > 0
+
+
+def _hungarian_stage(x, det, det_mask, alive, stream_active,
+                     iou_threshold: float):
+    """The fused path's lane-batched JV association stage (DESIGN.md §6).
+
+    Recomputes the predicted means (7 rows of adds — free next to the
+    49-row covariance, which never leaves the kernel), builds the
+    ``[D, T, S]`` IoU, and solves + gates one tiny assignment per lane
+    with ``core.association.associate_lane``.  Pure jnp, so under jit it
+    fuses into the same device program as the ``pallas_call`` that
+    consumes its output: no host round-trip between solve and update.
+    """
+    from repro.core.association import associate_lane
+
+    dm = det_mask > 0
+    if stream_active is not None:
+        dm = dm & (stream_active > 0)
+    trk_boxes = ref.z_to_xyxy_lane(ref.predict_mean_lane(x)[:4])  # [T, 4, S]
+    iou = ref.iou_lane(det, trk_boxes)                            # [D, T, S]
+    t2d, _ = associate_lane(iou, dm, alive > 0, iou_threshold)
+    return t2d
 
 
 def _resolve(interpret: bool | None) -> bool:

@@ -22,11 +22,22 @@ def _idx(i: int, j: int) -> int:
     return i * 7 + j
 
 
+def predict_mean_lane(x: jnp.ndarray) -> jnp.ndarray:
+    """The mean half of :func:`predict_lane` — ``x [7, ...]`` only.
+
+    Used standalone by the fused-Hungarian association stage
+    (``kernels/ops.py``), which needs the predicted boxes but not the
+    covariance: recomputing these 7 rows in plain jnp is free next to
+    keeping the 49-row covariance resident in the kernel.
+    """
+    ds = jnp.where(x[2] + x[6] <= 0.0, 0.0, x[6])
+    return jnp.stack([x[0] + x[4], x[1] + x[5], x[2] + ds, x[3],
+                      x[4], x[5], ds], axis=0)
+
+
 def predict_lane(x: jnp.ndarray, p: jnp.ndarray):
     """Constant-velocity predict on lane layout. ``x [7,B]``, ``p [49,B]``."""
-    ds = jnp.where(x[2] + x[6] <= 0.0, 0.0, x[6])
-    x_new = jnp.stack([x[0] + x[4], x[1] + x[5], x[2] + ds, x[3],
-                       x[4], x[5], ds], axis=0)
+    x_new = predict_mean_lane(x)
 
     def fp(i, j):  # (F P F^T)[i, j] exploiting F = I + shift(0..2 -> 4..6)
         v = p[_idx(i, j)]
@@ -148,10 +159,12 @@ def xyxy_to_z_lane(box: jnp.ndarray) -> jnp.ndarray:
 def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
                det_mask: jnp.ndarray, alive: jnp.ndarray,
                iou_threshold: float = 0.3,
-               active: jnp.ndarray | None = None):
-    """One whole SORT frame (predict -> IoU -> greedy assign -> masked
-    update) as pure lane-layout vector algebra — the oracle for the
-    single-dispatch ``kernels.frame.fused_frame`` Pallas kernel.
+               active: jnp.ndarray | None = None,
+               assoc: str = "greedy",
+               trk_to_det: jnp.ndarray | None = None):
+    """One whole SORT frame (predict -> IoU -> assign -> masked update) as
+    pure lane-layout vector algebra — the oracle for the single-dispatch
+    ``kernels.frame.fused_frame`` Pallas kernel.
 
     Shapes (DESIGN.md §2; streams on lanes, tracker slots on sublanes):
     ``x [7, T, S]``, ``p [49, T, S]``, ``det [D, 4, S]`` xyxy,
@@ -160,9 +173,19 @@ def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
     ``active [1, S]`` (bool or 0/1 float, optional) is the ragged-stream
     lane mask (DESIGN.md §3): lanes with ``active == 0`` are exact no-ops —
     their detections are masked out (no matches, so ``trk_to_det == -1``
-    and ``matched_det == False`` fall out of the greedy gate) and their
-    state is restored after predict/update, bit-identical to never having
-    run the frame.
+    and ``matched_det == False`` fall out of the association gate) and
+    their state is restored after predict/update, bit-identical to never
+    having run the frame.
+
+    ``assoc`` selects the association algorithm (DESIGN.md §6):
+    ``"greedy"`` (best-first masked argmax rounds) or ``"hungarian"``
+    (lane-batched JV solve, ``core.association.associate_lane`` — the
+    paper's algorithm).  Alternatively ``trk_to_det [T, S] int32`` supplies
+    a *precomputed* assignment and skips the IoU/association phases
+    entirely: this is how the Pallas kernel body consumes the fused-
+    Hungarian path, whose JV solve runs as a jitted stage **outside** the
+    kernel (data-dependent augmenting paths don't vectorize over lanes)
+    while predict and update stay resident.
 
     Returns ``(x, p, trk_to_det [T, S] int32, matched_det [D, S] bool)``.
     Tracker lifecycle (tick/birth) stays outside: it is integer bookkeeping
@@ -174,10 +197,25 @@ def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
     if active is not None:
         det_mask = det_mask * (active > 0)                  # [D,S] & [1,S]
     x, p = predict_lane(x, p)                               # [7,T,S], [49,T,S]
-    trk_boxes = z_to_xyxy_lane(x[:4])                       # [T, 4, S]
-    iou = iou_lane(det, trk_boxes)                          # [D, T, S]
-    trk_to_det, matched_det = greedy_assign_lane(
-        iou, det_mask, alive, iou_threshold)
+    if trk_to_det is not None:
+        # precomputed assignment (already gated): a matching, so matched
+        # detections are exactly the assigned values >= 0
+        d = det.shape[0]
+        di_iota = jnp.arange(d, dtype=jnp.int32).reshape(
+            (d, 1) + (1,) * (trk_to_det.ndim - 1))
+        matched_det = (trk_to_det[None] == di_iota).any(axis=1)
+    else:
+        trk_boxes = z_to_xyxy_lane(x[:4])                   # [T, 4, S]
+        iou = iou_lane(det, trk_boxes)                      # [D, T, S]
+        if assoc == "hungarian":
+            from repro.core.association import associate_lane
+            trk_to_det, matched_det = associate_lane(
+                iou, det_mask, alive, iou_threshold)
+        elif assoc == "greedy":
+            trk_to_det, matched_det = greedy_assign_lane(
+                iou, det_mask, alive, iou_threshold)
+        else:
+            raise ValueError(f"unknown assoc {assoc!r}")
     # gather each matched tracker's observation via one-hot contraction
     # over D (D <= ~16, trace-time unrolled; no per-lane dynamic gather)
     z_all = xyxy_to_z_lane(det)                             # [4, D, S]

@@ -65,8 +65,11 @@ class StreamScheduler:
 
     Works with both engine paths: ``use_kernels=True`` keeps a resident
     :class:`~repro.core.LaneSortState` and masks inside the fused kernel;
-    ``use_kernels=False`` masks the per-phase engine step.  Either way a
-    sequence's emitted tracks are bit-identical to running it alone.
+    ``use_kernels=False`` masks the per-phase engine step.  Both
+    association modes (``SortConfig.assoc``, DESIGN.md §6) serve through
+    the same chunked scan — the fused-Hungarian JV stage sees the masked
+    per-lane detections, so inactive lanes stay exact no-ops.  Either way
+    a sequence's emitted tracks are bit-identical to running it alone.
 
     Usage::
 
@@ -101,7 +104,11 @@ class StreamScheduler:
 
         # serving counters (benchmarks/ragged.py reads these)
         self.frames_processed = 0      # real sequence frames stepped
-        self.lane_steps = 0            # lanes x steps actually dispatched
+        # lanes x steps that carried any planned work: steps of a chunk
+        # whose `active` mask is all-False (the tail of a draining final
+        # chunk) are excluded, so `utilization` measures lane occupancy of
+        # working steps rather than being diluted by drain padding.
+        self.lane_steps = 0
         self.chunks_run = 0
         self.admissions: list[tuple[int, int]] = []  # (seq index, step)
 
@@ -144,6 +151,14 @@ class StreamScheduler:
     def busy(self) -> bool:
         return bool(self._pending) or any(
             s is not None for s in self._occupant)
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of dispatched working lane-steps that carried a real
+        frame (``frames_processed / lane_steps``).  Fully-idle tail steps
+        of a draining chunk are excluded from the denominator — they hold
+        no lanes hostage, they only pad the final ``lax.scan``."""
+        return self.frames_processed / max(self.lane_steps, 1)
 
     # ------------------------------------------------------------- planning
     def _plan_chunk(self):
@@ -199,7 +214,9 @@ class StreamScheduler:
             if k + 1 == seq.length:
                 finished.append(seq)
         self.frames_processed += len(mapping)
-        self.lane_steps += self.chunk * self.num_lanes
+        # denominator from the planned schedule, not the raw chunk size:
+        # fully-idle tail steps of a draining chunk carry no lanes' work
+        self.lane_steps += int(active.any(axis=1).sum()) * self.num_lanes
         self.chunks_run += 1
         for seq in finished:
             self._finalize(seq)

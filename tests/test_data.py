@@ -193,3 +193,32 @@ def test_audio_and_vision_batches():
     vb = tokens.vision_batch(rng, 2, 24, 4, 8, 100, ts)
     assert vb["patches"].shape == (2, 4, 8)
     assert vb["tokens"].shape == (2, 24)
+
+
+def test_mot15_empty_det_file_roundtrip(tmp_path):
+    """Regression: an empty / whitespace-only det file used to crash
+    np.loadtxt; it now parses to a well-formed zero-frame batch, and
+    write_det_file of that batch round-trips through read_det_file."""
+    for raw in ("", "\n", "   \n\t\n"):
+        db, dm = mot.read_det_file(io.StringIO(raw))
+        assert db.shape == (0, 1, 4) and db.dtype == np.float32
+        assert dm.shape == (0, 1) and dm.dtype == bool
+    # round-trip the zero-frame batch through a real file
+    p = tmp_path / "det.txt"
+    mot.write_det_file(p, np.zeros((0, 1, 4), np.float32),
+                       np.zeros((0, 1), bool))
+    rb, rm = mot.read_det_file(p)
+    assert rb.shape == (0, 1, 4) and rm.shape == (0, 1)
+    # frames with no surviving detections (all-False mask) also read back
+    mot.write_det_file(p, np.zeros((3, 2, 4), np.float32),
+                       np.zeros((3, 2), bool))
+    rb, rm = mot.read_det_file(p)
+    assert rm.sum() == 0
+
+
+def test_mot15_min_conf_filters_everything(tmp_path):
+    """All rows below min_conf used to hit frames.max() on an empty
+    array; now: the zero-frame batch."""
+    txt = "1,-1,10,10,20,20,0.1,-1,-1,-1\n2,-1,5,5,10,10,0.2,-1,-1,-1\n"
+    rb, rm = mot.read_det_file(io.StringIO(txt), min_conf=0.5)
+    assert rb.shape == (0, 1, 4) and rm.shape == (0, 1)

@@ -92,3 +92,42 @@ def test_identity_cost(n):
     cost = (1.0 - np.eye(n)).astype(np.float32)
     col4row = np.asarray(hungarian.solve(jnp.asarray(cost)))
     np.testing.assert_array_equal(col4row, np.arange(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 7), st.integers(1, 7), st.integers(1, 6),
+       st.integers(0, 2**31 - 1))
+def test_lane_layout_matches_batch_layout_bitwise(r, c, lanes, seed):
+    """``solve_masked_lane`` (batch on the trailing lane axis, the fused
+    frame step's layout) == ``solve_masked`` on the transposed batch, bit
+    for bit — moving the batch axis must not change any per-problem
+    decision."""
+    rng = np.random.default_rng(seed)
+    n = max(r, c)
+    cost = rng.normal(size=(lanes, r, c)).astype(np.float32)
+    rm = rng.random((lanes, r)) < 0.8
+    cm = rng.random((lanes, c)) < 0.8
+    want = np.asarray(hungarian.solve_masked(
+        jnp.asarray(cost), jnp.asarray(rm), jnp.asarray(cm), n))
+    got = np.asarray(hungarian.solve_masked_lane(
+        jnp.asarray(cost.transpose(1, 2, 0)), jnp.asarray(rm.T),
+        jnp.asarray(cm.T), n))
+    np.testing.assert_array_equal(got.T, want)
+
+
+def test_lane_layout_multi_lane_axes():
+    """solve_masked_lane flattens arbitrary trailing lane axes."""
+    rng = np.random.default_rng(11)
+    r = c = n = 4
+    cost = rng.normal(size=(r, c, 2, 3)).astype(np.float32)
+    rm = np.ones((r, 2, 3), bool)
+    cm = np.ones((c, 2, 3), bool)
+    out = np.asarray(hungarian.solve_masked_lane(
+        jnp.asarray(cost), jnp.asarray(rm), jnp.asarray(cm), n))
+    assert out.shape == (n, 2, 3)
+    for i in range(2):
+        for j in range(3):
+            ri, ci = linear_sum_assignment(cost[:, :, i, j])
+            ours = cost[np.arange(r), out[:, i, j], i, j].sum()
+            np.testing.assert_allclose(
+                ours, cost[:, :, i, j][ri, ci].sum(), rtol=1e-4, atol=1e-4)

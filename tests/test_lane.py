@@ -168,26 +168,98 @@ def test_fused_frame_active_mask_matches_oracle():
     assert (np.asarray(got[3])[:, off] == 0).all()
 
 
+def _rand_lane_operands(seed, t=6, d=5, s=8):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(7, t, s)).astype(np.float32))
+    a = rng.normal(size=(t, s, 7, 7)).astype(np.float32)
+    p_sq = a @ a.swapaxes(-1, -2) + np.eye(7, dtype=np.float32)
+    p = jnp.asarray(p_sq.reshape(t, s, 49).transpose(2, 0, 1).copy())
+    xy = rng.uniform(0, 200, size=(d, 2, s))
+    wh = rng.uniform(5, 100, size=(d, 2, s))
+    det = jnp.asarray(np.concatenate([xy, xy + wh], 1).astype(np.float32))
+    dm = jnp.asarray((rng.random((d, s)) < 0.8).astype(np.float32))
+    alive = jnp.asarray((rng.random((t, s)) < 0.7).astype(np.float32))
+    act = jnp.asarray((rng.random((1, s)) < 0.5).astype(np.float32))
+    return x, p, det, dm, alive, act
+
+
+@pytest.mark.parametrize("seed", [5, 23])
+@pytest.mark.parametrize("with_active", [False, True])
+def test_frame_step_hungarian_kernel_matches_oracle(seed, with_active):
+    """Fused-Hungarian kernel path (jitted JV stage + precomputed-
+    assignment Pallas kernel, interpret mode) == the full jnp oracle
+    (``ref.frame_lane(assoc="hungarian")``), including the ragged active
+    mask: inactive lanes stay exact no-ops."""
+    x, p, det, dm, alive, act = _rand_lane_operands(seed)
+    active = act if with_active else None
+    got = ops.frame_step(x, p, det, dm, alive, active, iou_threshold=0.3,
+                         block_s=4, mode="interpret", assoc="hungarian")
+    want = ops.frame_step(x, p, det, dm, alive, active, iou_threshold=0.3,
+                          block_s=4, mode="ref", assoc="hungarian")
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(want[3]))
+    if with_active:
+        off = np.asarray(act)[0] == 0
+        np.testing.assert_array_equal(np.asarray(got[0])[:, :, off],
+                                      np.asarray(x)[:, :, off])
+        np.testing.assert_array_equal(np.asarray(got[1])[:, :, off],
+                                      np.asarray(p)[:, :, off])
+        assert (np.asarray(got[2])[:, off] == -1).all()
+        assert (~np.asarray(got[3])[:, off]).all()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_associate_lane_hungarian_matches_engine_layout(seed):
+    """``association.associate_lane`` (the fused path's solve+gate) ==
+    ``associate_from_iou`` on the transposed batch, bit for bit — the
+    per-lane JV problems are identical no matter where the batch axis
+    lives."""
+    from repro.core import association
+
+    rng = np.random.default_rng(seed)
+    d, t, b = rng.integers(1, 9), rng.integers(1, 9), 5
+    iou = rng.random((b, d, t)).astype(np.float32)
+    dmask = rng.random((b, d)) < 0.8
+    tmask = rng.random((b, t)) < 0.8
+    a = association.associate_from_iou(jnp.asarray(iou), jnp.asarray(dmask),
+                                       jnp.asarray(tmask), 0.3)
+    t2d_l, md_l = association.associate_lane(
+        jnp.asarray(iou.transpose(1, 2, 0)), jnp.asarray(dmask.T),
+        jnp.asarray(tmask.T), 0.3)
+    np.testing.assert_array_equal(np.asarray(t2d_l).T,
+                                  np.asarray(a.trk_to_det))
+    np.testing.assert_array_equal(np.asarray(md_l).T,
+                                  np.asarray(a.matched_det))
+
+
 # ----------------------------------------- lane-persistent run() vs legacy
+@pytest.mark.parametrize("assoc", ["greedy", "hungarian"])
 @pytest.mark.parametrize("num_streams", [1, 3])
-def test_lane_run_bit_identical_to_legacy_lane_math(num_streams):
+def test_lane_run_bit_identical_to_legacy_lane_math(num_streams, assoc):
     """Full run(): the lane-persistent path == the legacy per-phase engine
-    driving the *same* lane-layout math (ref kernels + greedy assoc) —
-    same ops per element, so outputs match exactly."""
+    driving the *same* lane-layout math (ref kernels + the same assoc
+    mode, DESIGN.md §6) — same ops per element, so outputs match exactly.
+    This is the fused-Hungarian bit-parity lockdown: the lane-batched JV
+    stage + single dispatch equals the unfused Hungarian path."""
     db, dm = _scene(11, frames=40)
     d = db.shape[1]
     db = jnp.repeat(db[:, None], num_streams, 1)
     dm = jnp.repeat(dm[:, None], num_streams, 1)
 
     eng_lane = SortEngine(SortConfig(max_trackers=16, max_detections=d,
-                                     use_kernels=True))
+                                     use_kernels=True, assoc=assoc))
     _, out_lane = jax.jit(eng_lane.run)(eng_lane.init(num_streams), db, dm)
 
     pf, uf, jf = ops.engine_fns(use_ref=True)
     eng_legacy = SortEngine(
-        SortConfig(max_trackers=16, max_detections=d),
+        SortConfig(max_trackers=16, max_detections=d, assoc=assoc),
         predict_fn=pf, update_fn=uf, iou_fn=jf,
-        assoc_fn=greedy_iou_fn_for_engine(0.3))
+        assoc_fn=(greedy_iou_fn_for_engine(0.3) if assoc == "greedy"
+                  else None))
     _, out_legacy = jax.jit(eng_legacy.run)(eng_legacy.init(num_streams),
                                             db, dm)
 
@@ -203,27 +275,36 @@ def test_lane_run_bit_identical_to_legacy_lane_math(num_streams):
 
 
 # ------------------------------------------------ use_kernels flag wiring
+@pytest.mark.parametrize("assoc", ["hungarian", "greedy"])
 @pytest.mark.parametrize("seed", [0, 9])
-def test_use_kernels_flag_selects_matching_fused_path(seed):
+def test_use_kernels_flag_selects_matching_fused_path(seed, assoc):
     """Regression for the once-dead SortConfig.use_kernels flag: True and
-    False must produce matching tracks on a synthetic scene (greedy ==
-    Hungarian on these scenes; float tolerance covers einsum-vs-unrolled
-    op order)."""
+    False must produce matching tracks on a synthetic scene under either
+    association mode — since PR 3 the fused path runs the *same*
+    algorithm as the unfused one (float tolerance covers
+    einsum-vs-unrolled op order)."""
     db, dm = _scene(seed)
     d = db.shape[1]
     db, dm = db[:, None], dm[:, None]
     outs = {}
     for flag in (False, True):
         eng = SortEngine(SortConfig(max_trackers=16, max_detections=d,
-                                    use_kernels=flag))
+                                    use_kernels=flag, assoc=assoc))
         _, outs[flag] = jax.jit(eng.run)(eng.init(1), db, dm)
     np.testing.assert_array_equal(np.asarray(outs[True].uid),
                                   np.asarray(outs[False].uid))
     np.testing.assert_array_equal(np.asarray(outs[True].emit),
                                   np.asarray(outs[False].emit))
+    np.testing.assert_array_equal(np.asarray(outs[True].matched_det),
+                                  np.asarray(outs[False].matched_det))
     np.testing.assert_allclose(np.asarray(outs[True].boxes),
                                np.asarray(outs[False].boxes),
                                rtol=1e-3, atol=1e-2)
+
+
+def test_sort_config_rejects_unknown_assoc():
+    with pytest.raises(ValueError):
+        SortEngine(SortConfig(assoc="auction"))
 
 
 def test_use_kernels_single_step_matches_run():

@@ -1,16 +1,20 @@
 """End-to-end oracle parity: numpy reference SORT == batched engine.
 
 Runs whole synthetic sequences through ``core.ref_numpy.Sort`` (the
-faithful per-stream port of the original implementation the paper
-profiles) and through ``SortEngine`` on **both** execution paths, and
-asserts the emitted ``(uid, box)`` streams are identical frame by frame:
+faithful per-stream scipy-backed port of the original implementation the
+paper profiles) and through ``SortEngine`` on **both** execution paths
+under **both** association modes (DESIGN.md §6):
 
-* ``use_kernels=False`` (per-phase, Hungarian)  vs  ``assoc="hungarian"``
-* ``use_kernels=True``  (fused lane, greedy)    vs  ``assoc="greedy"``
+* ``use_kernels=False`` x ``assoc in {"hungarian", "greedy"}``
+* ``use_kernels=True``  x ``assoc in {"hungarian", "greedy"}`` — the
+  fused lane path; with ``"hungarian"`` its JV solve runs as the
+  lane-batched stage feeding the single fused dispatch, and this test is
+  the fused-Hungarian vs scipy ``linear_sum_assignment`` lockdown.
 
 Track identities must match exactly; boxes match to float32-vs-float64
 tolerance.  Hypothesis drives scene seeds and object densities; the
-engines are cached per (shape, path) so examples reuse compilations.
+engines are cached per (shape, path, assoc) so examples reuse
+compilations.
 """
 import jax
 import jax.numpy as jnp
@@ -24,7 +28,8 @@ from repro.core.ref_numpy import Sort as RefSort
 from repro.data.synthetic import SceneConfig, generate_scene
 
 NUM_FRAMES = 45  # fixed so every hypothesis example reuses the jit cache
-_ASSOC_FOR_PATH = {False: "hungarian", True: "greedy"}
+PATHS = [(False, "hungarian"), (False, "greedy"),
+         (True, "hungarian"), (True, "greedy")]
 _ENGINES: dict = {}
 
 
@@ -34,12 +39,12 @@ def _scene(seed, max_objects):
     return db, dm
 
 
-def _run_engine(db, dm, use_kernels):
-    key = (db.shape[1], use_kernels)
+def _run_engine(db, dm, use_kernels, assoc):
+    key = (db.shape[1], use_kernels, assoc)
     if key not in _ENGINES:
         eng = SortEngine(SortConfig(max_trackers=16,
                                     max_detections=db.shape[1],
-                                    use_kernels=use_kernels))
+                                    use_kernels=use_kernels, assoc=assoc))
         _ENGINES[key] = (eng, jax.jit(eng.run))
     eng, run_fn = _ENGINES[key]
     _, out = run_fn(eng.init(1), jnp.asarray(db)[:, None],
@@ -67,25 +72,26 @@ def _assert_identical_streams(out, ref_frames, ctx=""):
                                        err_msg=f"frame {t} uid {o[4]} {ctx}")
 
 
-@pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("use_kernels,assoc", PATHS)
 @pytest.mark.parametrize("seed,max_objects", [(0, 4), (13, 6)])
-def test_oracle_parity_deterministic(use_kernels, seed, max_objects):
+def test_oracle_parity_deterministic(use_kernels, assoc, seed, max_objects):
     db, dm = _scene(seed, max_objects)
-    out = _run_engine(db, dm, use_kernels)
-    ref_frames = _run_ref(db, dm, _ASSOC_FOR_PATH[use_kernels])
+    out = _run_engine(db, dm, use_kernels, assoc)
+    ref_frames = _run_ref(db, dm, assoc)
     _assert_identical_streams(out, ref_frames,
-                              f"(uk={use_kernels} seed={seed})")
+                              f"(uk={use_kernels} assoc={assoc} seed={seed})")
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("use_kernels,assoc", PATHS)
 @settings(max_examples=8, deadline=None, derandomize=True)
 @given(seed=st.integers(0, 2**31 - 1), max_objects=st.sampled_from([4, 6]))
-def test_oracle_parity_property(use_kernels, seed, max_objects):
+def test_oracle_parity_property(use_kernels, assoc, seed, max_objects):
     """Hypothesis sweep over scene seeds and object densities: the batched
-    engine and the per-stream numpy oracle emit identical track streams."""
+    engine (every path x assoc combination) and the per-stream numpy
+    oracle emit identical track streams."""
     db, dm = _scene(seed, max_objects)
-    out = _run_engine(db, dm, use_kernels)
-    ref_frames = _run_ref(db, dm, _ASSOC_FOR_PATH[use_kernels])
+    out = _run_engine(db, dm, use_kernels, assoc)
+    ref_frames = _run_ref(db, dm, assoc)
     _assert_identical_streams(out, ref_frames,
-                              f"(uk={use_kernels} seed={seed})")
+                              f"(uk={use_kernels} assoc={assoc} seed={seed})")

@@ -194,3 +194,35 @@ def test_scheduler_exactness_property(lengths, num_lanes):
     assert [r.name for r in results] == [s[0] for s in seqs]
     for (name, db, dm), tracks in zip(seqs, results):
         _assert_tracks_equal_solo(tracks, _solo_run(eng, db, dm), name)
+
+
+# --------------------------------------------------- utilization accounting
+def test_lane_steps_exclude_fully_idle_drain_tail():
+    """Regression: the utilization denominator used to count the
+    fully-idle tail steps of a draining chunk (`chunk * num_lanes` per
+    chunk); it must come from the planned `active` mask instead."""
+    eng = _engine(False)
+    sched = StreamScheduler(eng, num_lanes=2, chunk=8)
+    db, dm = _scene(0, frames=3)
+    sched.submit("only", db, dm)
+    (tracks,) = sched.run()
+    assert tracks.boxes.shape[0] == 3
+    assert sched.frames_processed == 3
+    # one chunk ran; only its first 3 steps carried any work
+    assert sched.chunks_run == 1
+    assert sched.lane_steps == 3 * 2          # not 8 * 2
+    assert sched.utilization == pytest.approx(3 / 6)
+
+
+def test_utilization_full_when_lanes_saturated():
+    """Two equal-length sequences on two lanes: every working step is
+    fully occupied, so utilization is exactly 1."""
+    eng = _engine(False)
+    sched = StreamScheduler(eng, num_lanes=2, chunk=4)
+    for i in range(2):
+        db, dm = _scene(i, frames=8)
+        sched.submit(f"s{i}", db, dm)
+    sched.run()
+    assert sched.frames_processed == 16
+    assert sched.lane_steps == 16
+    assert sched.utilization == 1.0

@@ -102,3 +102,54 @@ def test_masks_static_shapes_under_jit():
     compiled = step.lower(state, jnp.asarray(det_boxes[0][None].repeat(4, 0)),
                           jnp.asarray(det_mask[0][None].repeat(4, 0))).compile()
     assert compiled is not None
+
+
+def test_associate_zero_tracker_slots():
+    """Regression: T=0 (e.g. first frame before any births) used to
+    take_along_axis into a size-0 axis; now returns all-unmatched."""
+    from repro.core import association
+
+    rng = np.random.default_rng(2)
+    det = jnp.asarray(rng.uniform(0, 100, (3, 4, 4)).astype(np.float32))
+    dmask = jnp.asarray(rng.random((3, 4)) < 0.8)
+    trk = jnp.zeros((3, 0, 4), jnp.float32)
+    tmask = jnp.zeros((3, 0), bool)
+    a = association.associate(det, dmask, trk, tmask, 0.3)
+    assert a.trk_to_det.shape == (3, 0)
+    assert a.iou.shape == (3, 4, 0)
+    np.testing.assert_array_equal(np.asarray(a.det_to_trk),
+                                  np.full((3, 4), -1))
+    assert not np.asarray(a.matched_det).any()
+    # every valid detection should seed a birth
+    np.testing.assert_array_equal(np.asarray(a.unmatched_det),
+                                  np.asarray(dmask))
+
+
+def test_associate_zero_detections():
+    """The mirror degenerate shape (D=0, an empty frame) also guards."""
+    from repro.core import association
+
+    rng = np.random.default_rng(4)
+    det = jnp.zeros((2, 0, 4), jnp.float32)
+    dmask = jnp.zeros((2, 0), bool)
+    trk = jnp.asarray(rng.uniform(0, 100, (2, 5, 4)).astype(np.float32))
+    tmask = jnp.asarray(rng.random((2, 5)) < 0.8)
+    a = association.associate(det, dmask, trk, tmask, 0.3)
+    assert a.det_to_trk.shape == (2, 0)
+    np.testing.assert_array_equal(np.asarray(a.trk_to_det),
+                                  np.full((2, 5), -1))
+    # every alive tracker missed this frame
+    np.testing.assert_array_equal(np.asarray(a.unmatched_trk),
+                                  np.asarray(tmask))
+
+
+def test_associate_zero_slots_under_jit():
+    """The guard is a static-shape branch, so it must trace cleanly."""
+    from repro.core import association
+
+    det = jnp.ones((1, 2, 4), jnp.float32)
+    dmask = jnp.ones((1, 2), bool)
+    trk = jnp.zeros((1, 0, 4), jnp.float32)
+    tmask = jnp.zeros((1, 0), bool)
+    a = jax.jit(association.associate)(det, dmask, trk, tmask)
+    assert not np.asarray(a.matched_det).any()
