@@ -9,6 +9,11 @@ and results drain in submission order as MOT15 submission files.
 
     PYTHONPATH=src python examples/tracking_service.py --replicate 4 \
         --lanes 8 --out /tmp/sort_out
+
+``--devices N`` shards the lane budget over an N-device ``("lanes",)``
+mesh (DESIGN.md §7) — each device scans its own lane shard, bit-identical
+to the single-device run.  On CPU, export
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 """
 import argparse
 import os
@@ -18,6 +23,7 @@ from repro.core import SortConfig, SortEngine
 from repro.data import mot, stream
 from repro.data.synthetic import SceneConfig, generate_scene
 from repro.serve import StreamScheduler
+from repro.sharding import lane_mesh
 
 
 def load_or_synthesize(det_dir):
@@ -47,6 +53,11 @@ def main():
                          "multiplexed onto (recycled as sequences end)")
     ap.add_argument("--chunk", type=int, default=32,
                     help="frames planned/dispatched per host round-trip")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the lane budget over this many devices "
+                         "(1-D 'lanes' mesh, DESIGN.md §7; --lanes must "
+                         "divide evenly; on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first)")
     ap.add_argument("--fused", action="store_true",
                     help="lane-persistent fused frame path "
                          "(SortConfig.use_kernels=True): one kernel "
@@ -68,8 +79,9 @@ def main():
     d = max(db.shape[1] for _, db, _ in seqs)
     eng = SortEngine(SortConfig(max_trackers=16, max_detections=d,
                                 use_kernels=args.fused, assoc=args.assoc))
+    mesh = lane_mesh(args.devices) if args.devices > 1 else None
     sched = StreamScheduler(eng, num_lanes=args.lanes, max_dets=d,
-                            chunk=args.chunk)
+                            chunk=args.chunk, mesh=mesh)
 
     t_start = time.perf_counter()
     for name, db, dm in seqs:
@@ -82,6 +94,8 @@ def main():
     dt = time.perf_counter() - t_start
     mode = ("fused lane-persistent" if args.fused else "per-phase") \
         + f" / {args.assoc}"
+    if args.devices > 1:
+        mode += f" / {args.devices}-device lane mesh"
     print(f"{len(seqs)} sequences, {total_frames} frames in {dt:.2f}s "
           f"-> {total_frames / dt:,.0f} FPS (incl. compile, {mode}, "
           f"{args.lanes} lanes at {sched.utilization:.0%} utilization)  "

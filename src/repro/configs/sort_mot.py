@@ -13,6 +13,15 @@ class SortServiceConfig:
     sort: SortConfig
     streams_per_chip: int = 2048     # lane batch per device
     frames_per_segment: int = 512    # scan length per device step
+    # shards of the scheduler's lane budget over the 1-D ("lanes",) device
+    # mesh (DESIGN.md §7); the total lane budget is
+    # streams_per_chip * lane_shards and must divide evenly.  1 = single
+    # device, no mesh.
+    lane_shards: int = 1
+
+    @property
+    def num_lanes(self) -> int:
+        return self.streams_per_chip * self.lane_shards
 
 
 FULL = SortServiceConfig(
@@ -27,6 +36,17 @@ FUSED = SortServiceConfig(
     sort=SortConfig(max_trackers=16, max_detections=16, iou_threshold=0.3,
                     max_age=1, min_hits=3, assoc="hungarian",
                     use_kernels=True))
+
+# Device-sharded serving (DESIGN.md §7): the FUSED engine with its lane
+# budget spread over an 8-device ("lanes",) mesh — one fused dispatch per
+# device per frame, zero collectives, bit-identical to single-device.
+# Build the mesh with repro.sharding.lane_mesh(lane_shards) and pass it as
+# StreamScheduler(mesh=...).
+SHARDED = SortServiceConfig(
+    sort=SortConfig(max_trackers=16, max_detections=16, iou_threshold=0.3,
+                    max_age=1, min_hits=3, assoc="hungarian",
+                    use_kernels=True),
+    lane_shards=8)
 
 SMOKE = SortServiceConfig(
     sort=SortConfig(max_trackers=8, max_detections=8, assoc="hungarian"),

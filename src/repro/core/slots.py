@@ -16,6 +16,16 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+# uid headroom guard: ``next_uid`` is a per-stream int32 counter that only
+# resets when the stream is re-initialised (``core.sort.reset_ragged`` —
+# every scheduler admission starts a fresh uid namespace).  Births allocate
+# at most D uids per frame, so a counter below this limit cannot reach
+# int32 overflow within any chunk the scheduler dispatches (2**20 of slack
+# covers ~65k frames at D=16 between host checks).  Callers that keep one
+# stream alive long enough to cross it must fail loudly instead of
+# wrapping onto ids that may still be alive (serve/scheduler.py raises).
+UID_LIMIT = 2**31 - 2**20
+
 
 class SlotPool(NamedTuple):
     """Per-slot lifecycle bookkeeping. All fields ``[..., T]`` (+ scalar uid ctr).
@@ -26,7 +36,12 @@ class SlotPool(NamedTuple):
     ``hit_streak``: consecutive successful updates.
     ``time_since_update``: steps since last successful update.
     ``uid``: globally unique id (per stream), -1 when dead.
-    ``next_uid``: ``[...]`` per-stream counter for id assignment.
+    ``next_uid``: ``[...]`` per-stream counter for id assignment.  Grows
+    monotonically for the stream's lifetime and resets to ``uid_start``
+    only on re-init (``core.sort.reset_ragged``), so recycled lanes start
+    a fresh uid namespace with no live uid carried over; :data:`UID_LIMIT`
+    bounds how far a single stream may push it before the serving layer
+    refuses to continue (int32 overflow would alias live ids).
     """
 
     alive: jnp.ndarray

@@ -27,6 +27,13 @@ fixed budget of ``num_lanes`` engine lanes (DESIGN.md §3):
   stream (:class:`repro.data.stream.SequenceTracks`), bit-identical to a
   solo run of that sequence (the lane-recycling invariant, locked down by
   ``tests/test_scheduler.py``).
+* **Device sharding** (DESIGN.md §7): pass ``mesh=`` (a 1-D ``("lanes",)``
+  mesh from :func:`repro.sharding.lane_mesh`) and the lane axis is split
+  contiguously over the mesh's devices — each device scans its own lane
+  shard with the same single fused dispatch per step, zero collectives,
+  and bit-identical outputs (``tests/test_device_sharding.py``).  Host-
+  side planning is unchanged; chunk operands are placed with
+  ``NamedSharding`` so the jitted scan never inserts a resharding copy.
 """
 from __future__ import annotations
 
@@ -38,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sort as sort_mod
+from repro.core import slots, sort as sort_mod
 from repro.core.sort import SortEngine
 from repro.data.stream import ReorderBuffer, SequenceTracks
 
@@ -85,7 +92,8 @@ class StreamScheduler:
     """
 
     def __init__(self, engine: SortEngine, num_lanes: int,
-                 max_dets: Optional[int] = None, chunk: int = 32):
+                 max_dets: Optional[int] = None, chunk: int = 32,
+                 mesh=None):
         if num_lanes < 1:
             raise ValueError(f"num_lanes must be >= 1, got {num_lanes}")
         if chunk < 1:
@@ -94,8 +102,8 @@ class StreamScheduler:
         self.num_lanes = num_lanes
         self.max_dets = max_dets or engine.config.max_detections
         self.chunk = chunk
+        self.mesh = mesh
 
-        self._state = engine.init_ragged(num_lanes)
         self._pending: collections.deque[_Seq] = collections.deque()
         self._occupant: list[Optional[_Seq]] = [None] * num_lanes
         self._cursor = [0] * num_lanes
@@ -120,7 +128,19 @@ class StreamScheduler:
                 return self.engine.step_ragged(st, d, m, a)
             return jax.lax.scan(body, state, (det, dm, active, reset))
 
-        self._chunk_fn = jax.jit(chunk_fn)
+        if mesh is None:
+            self._sharding = None
+            self._state = engine.init_ragged(num_lanes)
+            self._chunk_fn = jax.jit(chunk_fn)
+        else:
+            # lanes -> mesh (DESIGN.md §7): validate the lane budget splits
+            # evenly, shard the resident state, and wrap the identical
+            # chunk scan in shard_map — planning above stays host-side and
+            # device-count-agnostic.
+            from repro.sharding.lanes import LaneSharding
+            self._sharding = LaneSharding(engine, mesh, num_lanes)
+            self._state = self._sharding.init()
+            self._chunk_fn = jax.jit(self._sharding.shard_chunk(chunk_fn))
 
     # --------------------------------------------------------------- intake
     def submit(self, name: str, det_boxes: np.ndarray,
@@ -149,6 +169,18 @@ class StreamScheduler:
 
     @property
     def busy(self) -> bool:
+        """True while the scheduler still owes the caller anything: queued
+        or in-flight sequences, *or* finished results buffered for
+        in-order release.  (The buffered term matters: a zero-frame
+        sequence submitted while idle finalizes straight into the reorder
+        buffer without ever occupying a lane — ``busy`` ignoring it left
+        that result stranded, since drain loops stopped before anything
+        popped it.)"""
+        return self._has_step_work or len(self._ready) > 0
+
+    @property
+    def _has_step_work(self) -> bool:
+        """Anything left that requires dispatching a chunk."""
         return bool(self._pending) or any(
             s is not None for s in self._occupant)
 
@@ -197,10 +229,17 @@ class StreamScheduler:
 
     # ------------------------------------------------------------ execution
     def _run_chunk(self) -> list[SequenceTracks]:
+        if not self._has_step_work:
+            # nothing to dispatch — only buffered completions to release
+            return self._ready.pop_ready()
         det, dm, active, reset, mapping = self._plan_chunk()
-        self._state, outs = self._chunk_fn(
-            self._state, jnp.asarray(det), jnp.asarray(dm),
-            jnp.asarray(active), jnp.asarray(reset))
+        if self._sharding is not None:
+            operands = self._sharding.place(det, dm, active, reset)
+        else:
+            operands = (jnp.asarray(det), jnp.asarray(dm),
+                        jnp.asarray(active), jnp.asarray(reset))
+        self._state, outs = self._chunk_fn(self._state, *operands)
+        self._check_uid_headroom()
         boxes = np.asarray(outs.boxes)                # [C, L, T, 4]
         uid = np.asarray(outs.uid)
         emit = np.asarray(outs.emit)
@@ -234,11 +273,47 @@ class StreamScheduler:
                   else np.zeros((0, t), bool)),
         ))
 
+    def _check_uid_headroom(self) -> None:
+        """Guard the per-lane int32 uid counter (``SlotPool.next_uid``).
+
+        ``reset_ragged`` resets the counter to ``uid_start`` on every lane
+        recycle, so under normal serving the counter is bounded by one
+        sequence's birth count.  A single monster sequence can still run
+        it toward int32 overflow; rather than silently wrapping onto uids
+        that may *still be alive*, fail loudly with the remediation.  The
+        check fetches the ``[L]`` int32 counter row each chunk (a tiny
+        cross-device gather in mesh mode) — negligible next to the chunk's
+        own output transfer, and the chunk boundary is already a host
+        sync point.
+        """
+        next_uid = np.asarray(self._state.pool.next_uid)
+        if next_uid.size and int(next_uid.max()) > slots.UID_LIMIT:
+            lane = int(next_uid.argmax())
+            raise RuntimeError(
+                f"track uid counter on lane {lane} exceeded "
+                f"slots.UID_LIMIT ({slots.UID_LIMIT}): a single sequence "
+                f"allocated ~2**31 track ids.  uids are int32 and only "
+                f"reset when the lane is recycled (reset_ragged); split "
+                f"the sequence or re-admit it to reset its uid namespace.")
+
+    def pop_ready(self) -> list[SequenceTracks]:
+        """Release every finished sequence whose turn has come (submission
+        order), **without dispatching anything** — the drain path for
+        results that finalized off the chunk path (e.g. zero-frame
+        sequences completed at ``submit`` time)."""
+        return self._ready.pop_ready()
+
+    def drain(self) -> list[SequenceTracks]:
+        """Run chunks until no step work remains, then release everything
+        buffered; returns all newly finished sequences in submission
+        order.  Never dispatches an empty chunk."""
+        results = []
+        while self._has_step_work:
+            results.extend(self._run_chunk())
+        results.extend(self.pop_ready())
+        return results
+
     def run(self) -> list[SequenceTracks]:
         """Process every submitted sequence to completion (drain), returning
         their track streams **in submission order**."""
-        results = []
-        while self.busy:
-            results.extend(self._run_chunk())
-        results.extend(self._ready.pop_ready())
-        return results
+        return self.drain()

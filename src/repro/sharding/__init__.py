@@ -1,2 +1,27 @@
+"""Mesh policy: logical-axis rules, activation specs, and the SORT lane axis.
+
+``rules``/``specs`` cover the LM stack (FSDP/TP/EP); ``lanes`` is the
+tracking service's device-parallel serving layer — the scheduler's lane
+budget sharded over a 1-D ``("lanes",)`` mesh with zero collectives
+(DESIGN.md §7).  The ``lanes`` symbols resolve lazily so LM-stack callers
+(``launch/train.py`` imports ``rules`` at startup) never pay the
+tracking-core import, and an import-time failure in one stack cannot
+break the other.
+"""
 from .rules import LOGICAL_RULES, spec_for_logical, params_pspecs  # noqa: F401
-from .specs import batch_pspecs, cache_pspecs, named  # noqa: F401
+from .specs import (LANE_AXIS, batch_pspecs, cache_pspecs,  # noqa: F401
+                    lane_dim_spec, named)
+
+_LANES_EXPORTS = ("LaneSharding", "MeshLaneState", "lane_mesh",
+                  "shard_count", "state_pspecs")
+
+
+def __getattr__(name):
+    if name in _LANES_EXPORTS:
+        from . import lanes
+        return getattr(lanes, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LANES_EXPORTS))

@@ -1,0 +1,234 @@
+"""Device-sharded lane serving — the lane axis spread over a JAX mesh.
+
+The paper's throughput result (§VI) is that tiny-matrix SORT scales only
+by running *independent* video sequences in parallel — one OpenMP worker
+per stream there, one vector lane per stream here (DESIGN.md §2).  A
+single device caps the lane budget; this module adds the next rung
+(DESIGN.md §7): shard the lane axis over a 1-D ``("lanes",)`` device mesh
+so one :class:`~repro.serve.StreamScheduler` drives N devices, each
+running the same single-dispatch fused frame step on its own contiguous
+lane shard.
+
+Because sequences are independent — no phase of the frame step ever
+crosses lanes (DESIGN.md §3.2) — the sharded program needs **zero
+cross-device collectives**: ``shard_map`` (via :mod:`repro.compat`)
+partitions the state and chunk operands, every device scans its shard
+locally, and a sharded run is *bit-identical* to the single-device run
+(``tests/test_device_sharding.py`` locks this down for both engine paths
+and both association modes).
+
+Sharding layouts (the lane axis must be a contiguous array dimension for
+``NamedSharding`` to place each device's shard without copies):
+
+* per-phase path — :class:`~repro.core.SortState`: the stream axis is
+  dim 0 of every leaf (``x [L, T, 7]``, pool fields ``[L, T]``), so the
+  state shards directly.
+* fused path — :class:`~repro.core.LaneSortState` flattens lanes
+  tracker-slot major (``b = t * S_pad + s``), so a contiguous split of
+  ``[7, B]`` would cut the *slot* axis, not the stream axis.  The sharded
+  resident state therefore keeps the free 3-D view
+  (:class:`MeshLaneState`: ``x [7, T, L]``, ``p [49, T, L]``) whose minor
+  axis *is* the lane axis; each device's shard reshapes back to a local
+  ``LaneSortState`` at zero cost inside the ``shard_map`` body.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.core import kalman, slots
+from repro.core.sort import LaneSortState, SortOutput, SortState
+
+from .specs import LANE_AXIS, lane_dim_spec, named
+
+__all__ = ["LANE_AXIS", "MeshLaneState", "LaneSharding", "lane_mesh",
+           "shard_count", "state_pspecs"]
+
+
+def lane_mesh(num_devices: Optional[int] = None, *, devices=None) -> Mesh:
+    """A 1-D ``("lanes",)`` mesh over the first ``num_devices`` devices.
+
+    On CPU, simulated devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    initializes); the error message below points there because it is the
+    step everyone forgets.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    if num_devices is not None:
+        if num_devices > len(devs):
+            raise ValueError(
+                f"requested {num_devices} devices, only {len(devs)} "
+                f"available (on CPU, set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={num_devices} "
+                f"before jax initializes)")
+        devs = devs[:num_devices]
+    return Mesh(np.asarray(devs), (LANE_AXIS,))
+
+
+def shard_count(mesh: Mesh) -> int:
+    if LANE_AXIS not in mesh.shape:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has no {LANE_AXIS!r} axis; build it "
+            f"with repro.sharding.lane_mesh")
+    return int(mesh.shape[LANE_AXIS])
+
+
+class MeshLaneState(NamedTuple):
+    """:class:`~repro.core.LaneSortState` in its free 3-D view, lane-minor.
+
+    ``x [7, T, L]`` / ``p [49, T, L]`` are row-major reshapes of the flat
+    ``[7, B]`` / ``[49, B]`` lane state (``B = T * L``), so converting
+    between the two is free *per shard*; ``pool`` fields are already
+    ``[T, L]`` and ``frame_count`` ``[L]``.  Every leaf carries the lane
+    axis as its **last** dimension, which is what lets one
+    ``PartitionSpec`` family shard the whole pytree contiguously.
+    """
+
+    x: jnp.ndarray            # [7, T, L]
+    p: jnp.ndarray            # [49, T, L]
+    pool: slots.SlotPool      # [T, L] (+ next_uid [L])
+    frame_count: jnp.ndarray  # [L]
+
+
+def mesh_view(lane: LaneSortState) -> MeshLaneState:
+    """Flat lane state -> 3-D mesh view (free row-major reshape)."""
+    t, sp = lane.pool.alive.shape
+    return MeshLaneState(
+        x=lane.x.reshape(kalman.DIM_X, t, sp),
+        p=lane.p.reshape(49, t, sp),
+        pool=lane.pool,
+        frame_count=lane.frame_count)
+
+
+def lane_view(mesh_state: MeshLaneState) -> LaneSortState:
+    """3-D mesh view -> flat lane state (the engine's resident layout)."""
+    t, sp = mesh_state.pool.alive.shape
+    return LaneSortState(
+        x=mesh_state.x.reshape(kalman.DIM_X, t * sp),
+        p=mesh_state.p.reshape(49, t * sp),
+        pool=mesh_state.pool,
+        frame_count=mesh_state.frame_count)
+
+
+def state_pspecs(state):
+    """PartitionSpecs sharding a state pytree's lane axis over ``lanes``.
+
+    :class:`MeshLaneState` carries the lane axis last on every leaf;
+    :class:`~repro.core.SortState` carries it first.  Either way one
+    uniform rule specs the whole tree.
+    """
+    if isinstance(state, MeshLaneState):
+        return jax.tree.map(lambda a: lane_dim_spec(a.ndim, a.ndim - 1),
+                            state)
+    if isinstance(state, SortState):
+        return jax.tree.map(lambda a: lane_dim_spec(a.ndim, 0), state)
+    raise TypeError(f"unshardable state type {type(state).__name__}; "
+                    f"expected MeshLaneState or SortState")
+
+
+# chunk operands are [chunk, L, ...]: the lane axis is dim 1 everywhere
+def _chunk_spec(ndim: int) -> P:
+    return lane_dim_spec(ndim, 1)
+
+
+class LaneSharding:
+    """``lanes -> mesh`` sharding layer for the stream scheduler.
+
+    Wraps the scheduler's chunked ``lax.scan`` in ``shard_map`` over a
+    1-D ``("lanes",)`` mesh: each device owns ``num_lanes / N`` contiguous
+    lanes of the resident state and steps them with the engine's own
+    ``step_ragged`` — the same single fused dispatch per device per scan
+    step, no collectives, host-side planning untouched.
+
+    Usage (what ``StreamScheduler(mesh=...)`` does internally)::
+
+        sharding = LaneSharding(engine, mesh, num_lanes)
+        state = sharding.init()                     # device_put, sharded
+        chunk = jax.jit(sharding.shard_chunk(body)) # body = reset+step scan
+        det, dm, act, rst = sharding.place(det, dm, act, rst)
+        state, outs = chunk(state, det, dm, act, rst)
+    """
+
+    def __init__(self, engine, mesh: Mesh, num_lanes: int):
+        n = shard_count(mesh)
+        if num_lanes % n != 0:
+            raise ValueError(
+                f"num_lanes={num_lanes} must divide evenly over the "
+                f"{n}-device lane mesh (got remainder {num_lanes % n})")
+        self.engine = engine
+        self.mesh = mesh
+        self.num_lanes = num_lanes
+        self.shard_count = n
+        self.lanes_per_shard = num_lanes // n
+        self._fused = bool(engine.config.use_kernels)
+        self._state_specs = None
+
+    # ----------------------------------------------------------- state init
+    def init(self):
+        """Sharded initial ragged state, placed with ``NamedSharding``.
+
+        The init state is lane-uniform (zero means, broadcast covariance,
+        empty pool), so the global state is ``shard_count`` tiled copies of
+        a per-shard ``init_ragged`` — bit-identical to what each device
+        would initialize locally, including the fused path's per-shard
+        stream padding.
+        """
+        if self._fused:
+            local = mesh_view(self.engine.init_ragged(self.lanes_per_shard))
+            state = jax.tree.map(
+                lambda a: jnp.tile(
+                    a, (1,) * (a.ndim - 1) + (self.shard_count,)), local)
+        else:
+            state = self.engine.init(self.num_lanes)
+        self._state_specs = state_pspecs(state)
+        return jax.device_put(state, named(self._state_specs, self.mesh))
+
+    # ------------------------------------------------------------ chunk fn
+    def shard_chunk(self, chunk_body):
+        """Wrap the scheduler's chunk scan in ``shard_map``.
+
+        ``chunk_body(state, det, dm, active, reset) -> (state, outs)`` is
+        the unsharded scan (masked re-init + ``step_ragged`` per step); it
+        runs unchanged on each device's local lane shard.  On the fused
+        path the carried state crosses the boundary in its 3-D mesh view
+        and reshapes to the flat local lane layout inside — both reshapes
+        are free.  No collective appears anywhere in the body, so the
+        compiled program is N independent per-device scans.
+        """
+        if self._state_specs is None:
+            raise RuntimeError("call init() before shard_chunk()")
+        fused = self._fused
+
+        def local_chunk(state, det, dm, active, reset):
+            st = lane_view(state) if fused else state
+            st, outs = chunk_body(st, det, dm, active, reset)
+            return (mesh_view(st) if fused else st), outs
+
+        out_specs = (self._state_specs,
+                     SortOutput(boxes=_chunk_spec(4), uid=_chunk_spec(3),
+                                emit=_chunk_spec(3), matched_det=_chunk_spec(3)))
+        return compat.shard_map(
+            local_chunk, self.mesh,
+            in_specs=(self._state_specs, _chunk_spec(4), _chunk_spec(3),
+                      _chunk_spec(2), _chunk_spec(2)),
+            out_specs=out_specs,
+            check_vma=False)
+
+    # ----------------------------------------------------------- placement
+    def place(self, det, dm, active, reset):
+        """Host chunk operands -> device, already lane-sharded.
+
+        ``device_put`` with the matching ``NamedSharding`` scatters each
+        host array straight to its owning devices, so the jitted chunk
+        consumes committed shardings and never inserts a resharding copy.
+        """
+        arrs = (det, dm, active, reset)
+        return tuple(
+            jax.device_put(np.asarray(a),
+                           NamedSharding(self.mesh, _chunk_spec(a.ndim)))
+            for a in arrs)

@@ -15,7 +15,14 @@ experts    model               MoE expert dim — EP
 ff_exp     data                per-expert hidden — FSDP
 inner      model               SSM inner width — TP
 lora       None                MLA latent ranks (small, replicated)
+stream     lanes               SORT serving lane axis — pure throughput
 =========  ==================  =====================================
+
+``stream`` is the tracking service's population axis (DESIGN.md §7): the
+scheduler's lane budget over a dedicated 1-D ``("lanes",)`` mesh.  It
+never mixes with ``data``/``model`` because the SORT frame step has no
+cross-lane term — device parallelism is plain replication of independent
+per-lane programs (``repro.sharding.lanes``).
 
 Rules are *shape-aware*: a dim whose size does not divide the mapped mesh
 axes falls back to replication (e.g. qwen2-7b's 28 heads on a 16-way model
@@ -38,6 +45,7 @@ LOGICAL_RULES = {
     "ff_exp": ("data",),
     "inner": ("model",),
     "lora": (),
+    "stream": ("lanes",),
     None: (),
 }
 

@@ -4,11 +4,33 @@ The paper's throughput discipline as mesh policy: every *population* axis
 (training batch, decode request batch, tracker stream axis) shards over
 ``(pod, data)`` with zero cross-member collectives; model internals shard
 over ``model``.
+
+For the SORT serving path the population axis has its own dedicated 1-D
+mesh axis, ``"lanes"`` (:data:`LANE_AXIS`): the scheduler's lane budget is
+split contiguously over devices with **no** other axis in play, because
+the fused frame step never communicates across lanes (DESIGN.md §7).
+:func:`lane_dim_spec` builds the one PartitionSpec family every lane-
+sharded pytree uses; :mod:`repro.sharding.lanes` maps it onto whole state
+and chunk-operand trees.
 """
 from __future__ import annotations
 
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# The SORT lane axis: one logical mesh axis for the whole serving
+# population (DESIGN.md §7).  Sequences are independent, so sharding this
+# axis needs zero collectives — the device-level restatement of the
+# paper's one-worker-per-video throughput model.
+LANE_AXIS = "lanes"
+
+
+def lane_dim_spec(ndim: int, lane_dim: int) -> P:
+    """Spec sharding dimension ``lane_dim`` of a rank-``ndim`` array over
+    :data:`LANE_AXIS`, replicating every other dimension."""
+    dims = [None] * ndim
+    dims[lane_dim] = LANE_AXIS
+    return P(*dims)
 
 
 def dp_axes(mesh: Mesh) -> tuple:

@@ -196,6 +196,93 @@ def test_scheduler_exactness_property(lengths, num_lanes):
         _assert_tracks_equal_solo(tracks, _solo_run(eng, db, dm), name)
 
 
+# ------------------------------------------------- stranded-result draining
+def test_zero_frame_sequence_is_not_stranded():
+    """Regression: a zero-frame sequence submitted while the scheduler is
+    idle finalizes straight into the reorder buffer, but `busy` ignored
+    buffered results and results only popped inside the chunk path — the
+    documented `while sched.busy` drain loop never surfaced it."""
+    sched = StreamScheduler(_engine(True), num_lanes=2, chunk=4)
+    sched.submit("empty", np.zeros((0, MAX_DETS, 4), np.float32),
+                 np.zeros((0, MAX_DETS), bool))
+    assert sched.busy                       # was False before the fix
+    got = sched.pop_ready()                 # no dispatch required
+    assert [t.name for t in got] == ["empty"]
+    assert got[0].num_frames == 0
+    assert not sched.busy
+    assert sched.chunks_run == 0            # nothing was ever dispatched
+
+
+def test_drain_releases_buffered_results_without_empty_chunk():
+    """drain() surfaces buffered zero-frame results alongside real work,
+    in submission order, and never dispatches an empty chunk for them."""
+    eng = _engine(True)
+    db, dm = _scene(8, 5)
+    sched = StreamScheduler(eng, num_lanes=2, chunk=4)
+    sched.submit("empty0", np.zeros((0, MAX_DETS, 4), np.float32),
+                 np.zeros((0, MAX_DETS), bool))
+    sched.submit("real", db, dm)
+    results = sched.drain()
+    assert [t.name for t in results] == ["empty0", "real"]
+    _assert_tracks_equal_solo(results[1], _solo_run(eng, db, dm), "real")
+    chunks_for_real = sched.chunks_run
+    # drain again with only a buffered result: no new chunk may run
+    sched.submit("empty1", np.zeros((0, MAX_DETS, 4), np.float32),
+                 np.zeros((0, MAX_DETS), bool))
+    (only,) = sched.drain()
+    assert only.name == "empty1"
+    assert sched.chunks_run == chunks_for_real
+    assert not sched.busy
+
+
+# ------------------------------------------------------------- uid headroom
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_uid_guard_trips_before_int32_overflow(use_kernels):
+    """A lane whose uid counter crosses slots.UID_LIMIT mid-sequence must
+    fail loudly (silent int32 wraparound could alias live track ids)."""
+    from repro.core import slots
+
+    eng = _engine(use_kernels)
+    sched = StreamScheduler(eng, num_lanes=1, chunk=4)
+    sched.submit("monster", *_scene(30, 8))
+    sched._run_chunk()                       # first 4 frames, uids live
+    st = sched._state
+    sched._state = st._replace(pool=st.pool._replace(
+        next_uid=jnp.full_like(st.pool.next_uid, slots.UID_LIMIT + 1)))
+    with pytest.raises(RuntimeError, match="uid counter"):
+        sched.run()
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_recycled_lane_never_reuses_a_live_uid(use_kernels):
+    """Lane recycling resets the uid namespace: after reset_ragged the
+    recycled lane holds no live uid and its counter restarts at
+    uid_start, while the other lane's uids and counter are untouched —
+    so a new sequence's ids can never collide with live trackers."""
+    from repro.core import sort as sort_mod
+
+    eng = _engine(use_kernels)
+    state = eng.init_ragged(2)
+    db, dm = _scene(31, 6)
+    both = jnp.asarray(np.stack([db, db], axis=1))
+    masks = jnp.asarray(np.stack([dm, dm], axis=1))
+    active = jnp.ones((2,), bool)
+    for f in range(6):                       # populate live uids on both
+        state, _ = eng.step_ragged(state, both[f], masks[f], active)
+    pool_before = jax.device_get(state.pool)
+    reset = jnp.asarray(np.array([True, False]))
+    state = sort_mod.reset_ragged(state, reset)
+    pool = jax.device_get(state.pool)
+    uid = pool.uid if not use_kernels else pool.uid.T      # -> [lanes, T]
+    uid_before = (pool_before.uid if not use_kernels
+                  else pool_before.uid.T)
+    assert (uid_before[0] >= 1).any()        # lane 0 really had live uids
+    assert (uid[0] == -1).all()              # ...all cleared by the reset
+    assert int(pool.next_uid[0]) == 1        # fresh namespace
+    np.testing.assert_array_equal(uid[1], uid_before[1])   # lane 1 intact
+    assert int(pool.next_uid[1]) == int(pool_before.next_uid[1])
+
+
 # --------------------------------------------------- utilization accounting
 def test_lane_steps_exclude_fully_idle_drain_tail():
     """Regression: the utilization denominator used to count the

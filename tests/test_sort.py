@@ -104,6 +104,81 @@ def test_masks_static_shapes_under_jit():
     assert compiled is not None
 
 
+# ------------------------------------------------------- lifecycle audit
+# Hand-stepped traces locking slots.tick + emit gating to original SORT
+# semantics (kill when time_since_update > max_age; emit when updated this
+# frame AND (hit_streak >= min_hits OR frame_count <= min_hits)), on both
+# engine paths, cross-checked against the numpy oracle frame by frame.
+# The engine resets hit_streak at the missed frame's tick where Bewley
+# defers it to the next predict — representationally different, observably
+# identical (emit already requires an update this frame).
+
+_BOX = np.array([10.0, 10.0, 20.0, 20.0], np.float32)
+
+
+def _step_schedule(use_kernels, present):
+    """Step one stream through a present/absent detection schedule,
+    returning per-frame (alive, uid, hits, hit_streak, tsu, emitted)."""
+    eng = SortEngine(SortConfig(max_trackers=4, max_detections=1,
+                                use_kernels=use_kernels))
+    state = eng.init(1)
+    rows = []
+    for pres in present:
+        state, out = eng.step(state, jnp.asarray(_BOX[None, None]),
+                              jnp.asarray(np.array([[bool(pres)]])))
+        pool = state.pool
+        rows.append((bool(pool.alive[0, 0]), int(pool.uid[0, 0]),
+                     int(pool.hits[0, 0]), int(pool.hit_streak[0, 0]),
+                     int(pool.time_since_update[0, 0]),
+                     bool(out.emit[0, 0])))
+    return rows
+
+
+def _ref_emits(present):
+    ref = RefSort()
+    out = []
+    for pres in present:
+        frame = ref.update(_BOX[None] if pres else np.zeros((0, 4)))
+        out.append(sorted(int(o[4]) for o in frame))
+    return out
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_lifecycle_trace_miss_revive_and_death(use_kernels):
+    """One object: warm-up emits, a miss at tsu==max_age survives, the
+    revived track stays silent until its streak rebuilds, and the second
+    consecutive miss (tsu > max_age) kills it — frame-exact."""
+    present = [1, 1, 1, 1, 0, 1, 0, 0]
+    rows = _step_schedule(use_kernels, present)
+    #         alive  uid hits streak tsu  emit
+    assert rows == [
+        (True,  1, 0, 0, 0, True),    # f1 birth; warm-up emit
+        (True,  1, 1, 1, 0, True),    # f2 match; warm-up emit
+        (True,  1, 2, 2, 0, True),    # f3 match; warm-up boundary (fc==min_hits)
+        (True,  1, 3, 3, 0, True),    # f4 streak reaches min_hits
+        (True,  1, 3, 0, 1, False),   # f5 miss: survives (tsu == max_age)
+        (True,  1, 4, 1, 0, False),   # f6 re-acquired: alive but SILENT
+        (True,  1, 4, 0, 1, False),   # f7 miss again: still alive
+        (False, -1, 4, 0, 2, False),  # f8 tsu > max_age: killed
+    ]
+    # the observable emit stream must equal the numpy oracle's
+    emitted = [[1] if r[5] else [] for r in rows]
+    assert emitted == _ref_emits(present)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_lifecycle_trace_late_birth_has_no_warmup(use_kernels):
+    """A tracker born after frame min_hits gets no warm-up: it must stay
+    silent for exactly min_hits frames until its streak qualifies."""
+    present = [0, 0, 0, 0, 1, 1, 1, 1]
+    rows = _step_schedule(use_kernels, present)
+    assert [r[5] for r in rows] == [False] * 7 + [True]  # emits only at f8
+    assert rows[4] == (True, 1, 0, 0, 0, False)   # born f5, fc > min_hits
+    assert rows[7] == (True, 1, 3, 3, 0, True)    # streak == min_hits
+    emitted = [[1] if r[5] else [] for r in rows]
+    assert emitted == _ref_emits(present)
+
+
 def test_associate_zero_tracker_slots():
     """Regression: T=0 (e.g. first frame before any births) used to
     take_along_axis into a size-0 axis; now returns all-unmatched."""
