@@ -17,8 +17,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (association_ablation, datasets, device_scaling,
-                            kernel_ai, ragged, scaling, speedup)
+    from benchmarks import (association_ablation, autoscale, datasets,
+                            device_scaling, kernel_ai, ragged, scaling,
+                            speedup)
 
     sections = [
         ("tableI", datasets.run),
@@ -27,6 +28,9 @@ def main() -> None:
         ("tableVI", scaling.run),
         ("ragged", ragged.run),
         ("ablation", association_ablation.run),
+        # elastic vs fixed lane budgets on a bursty 4-phase arrival trace
+        # (DESIGN.md §8)
+        ("autoscale", autoscale.run),
         # reports per-device rows only up to jax.device_count(); export
         # XLA_FLAGS=--xla_force_host_platform_device_count=8 for the full
         # {1,2,4,8} sweep on CPU (DESIGN.md §7)

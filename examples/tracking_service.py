@@ -53,6 +53,18 @@ def main():
                          "multiplexed onto (recycled as sequences end)")
     ap.add_argument("--chunk", type=int, default=32,
                     help="frames planned/dispatched per host round-trip")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic lane budget (DESIGN.md §8): autoscale "
+                         "between --min-lanes and --lanes over a "
+                         "pre-compiled power-of-two width ladder — grow "
+                         "on queue pressure, shrink once evacuating "
+                         "lanes drain; outputs stay bit-identical to the "
+                         "fixed --lanes run")
+    ap.add_argument("--min-lanes", type=int, default=None,
+                    help="ladder floor for --autoscale (default: "
+                         "--lanes // 4 when that forms a power-of-two "
+                         "ladder, raised until it divides --devices, "
+                         "else --lanes); --lanes must be min * 2**k")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the lane budget over this many devices "
                          "(1-D 'lanes' mesh, DESIGN.md §7; --lanes must "
@@ -70,6 +82,9 @@ def main():
                          "jitted lane-batched stage); 'greedy' is the "
                          "cheaper in-kernel best-first matcher")
     args = ap.parse_args()
+    if args.min_lanes is not None and not args.autoscale:
+        ap.error("--min-lanes only applies with --autoscale "
+                 "(a fixed budget is just --lanes)")
 
     seqs = load_or_synthesize(args.det_dir)
     if args.replicate > 1:
@@ -80,8 +95,19 @@ def main():
     eng = SortEngine(SortConfig(max_trackers=16, max_detections=d,
                                 use_kernels=args.fused, assoc=args.assoc))
     mesh = lane_mesh(args.devices) if args.devices > 1 else None
-    sched = StreamScheduler(eng, num_lanes=args.lanes, max_dets=d,
-                            chunk=args.chunk, mesh=mesh)
+    min_lanes = max_lanes = None
+    if args.autoscale:
+        max_lanes = args.lanes
+        min_lanes = args.min_lanes
+        if min_lanes is None:       # largest 4x headroom that stays a ladder
+            min_lanes = args.lanes // 4 if args.lanes % 4 == 0 else args.lanes
+            while min_lanes % args.devices and min_lanes < args.lanes:
+                min_lanes *= 2  # every width must divide the mesh;
+                # doubling stays on-ladder and stops at --lanes (an
+                # indivisible --lanes fails scheduler validation anyway)
+    sched = StreamScheduler(eng, num_lanes=min_lanes or args.lanes,
+                            max_dets=d, chunk=args.chunk, mesh=mesh,
+                            min_lanes=min_lanes, max_lanes=max_lanes)
 
     t_start = time.perf_counter()
     for name, db, dm in seqs:
@@ -96,9 +122,13 @@ def main():
         + f" / {args.assoc}"
     if args.devices > 1:
         mode += f" / {args.devices}-device lane mesh"
+    lanes_str = f"{args.lanes} lanes"
+    if args.autoscale:
+        lanes_str = (f"elastic {sched.ladder[0]}-{sched.ladder[-1]} lanes, "
+                     f"{len(sched.resizes)} resizes")
     print(f"{len(seqs)} sequences, {total_frames} frames in {dt:.2f}s "
           f"-> {total_frames / dt:,.0f} FPS (incl. compile, {mode}, "
-          f"{args.lanes} lanes at {sched.utilization:.0%} utilization)  "
+          f"{lanes_str} at {sched.utilization:.0%} utilization)  "
           f"results in {args.out}")
 
 

@@ -18,6 +18,14 @@ class SortServiceConfig:
     # streams_per_chip * lane_shards and must divide evenly.  1 = single
     # device, no mesh.
     lane_shards: int = 1
+    # elastic lane budget bounds (DESIGN.md §8): when set, the scheduler
+    # autoscales over the pre-compiled power-of-two ladder
+    # [min_lanes .. max_lanes] from queue depth and utilization
+    # (StreamScheduler(min_lanes=, max_lanes=)); max_lanes must be
+    # min_lanes * 2**k, and in mesh mode every ladder width must divide
+    # over lane_shards.  None = fixed budget of num_lanes.
+    min_lanes: int | None = None
+    max_lanes: int | None = None
 
     @property
     def num_lanes(self) -> int:
@@ -47,6 +55,18 @@ SHARDED = SortServiceConfig(
                     max_age=1, min_hits=3, assoc="hungarian",
                     use_kernels=True),
     lane_shards=8)
+
+# Elastic lane serving (DESIGN.md §8): the FUSED engine with an
+# autoscaling budget — bursty traffic grows the ladder 256 -> 512 -> 1024
+# -> 2048 the moment demand exceeds the width, and idle phases shrink it
+# back once the evacuating lanes drain.  Every width is pre-compiled at
+# construction, so a resize never recompiles; outputs stay bit-identical
+# to a fixed max_lanes run (tests/test_autoscale.py).
+ELASTIC = SortServiceConfig(
+    sort=SortConfig(max_trackers=16, max_detections=16, iou_threshold=0.3,
+                    max_age=1, min_hits=3, assoc="hungarian",
+                    use_kernels=True),
+    min_lanes=256, max_lanes=2048)
 
 SMOKE = SortServiceConfig(
     sort=SortConfig(max_trackers=8, max_detections=8, assoc="hungarian"),

@@ -6,4 +6,5 @@ association, slot-pool lifecycle, and the batched SortEngine.
 from . import association, bbox, hungarian, kalman, metrics, slots  # noqa: F401
 from .sort import (LaneSortState, SortConfig, SortEngine,  # noqa: F401
                    SortOutput, SortState, lane_state_of, reset_lanes,
-                   reset_ragged, reset_streams, sort_state_of)
+                   reset_ragged, reset_streams, resize_streams,
+                   sort_state_of)

@@ -139,6 +139,43 @@ def birth(pool: SlotPool, slot_for: jnp.ndarray) -> SlotPool:
     )
 
 
+def resize_pool(pool: SlotPool, num_streams: int,
+                uid_start: int = 1) -> SlotPool:
+    """Resize an engine-layout pool (slot fields ``[S, T]``, ``next_uid
+    [S]``) on the stream axis — the lane-migration primitive behind
+    elastic lane budgets (DESIGN.md §8).
+
+    Shrink slices the leading streams (the caller must have drained the
+    dropped tail — live trackers there would vanish silently); grow
+    appends streams carrying the :func:`init_pool` values (``alive=False``,
+    ``uid=-1``, ``next_uid=uid_start``), so a grown pool is bit-identical
+    to one whose new streams were just re-initialised.  Kept streams are
+    untouched bit for bit in both directions, which is what lets a
+    mid-sequence lane survive a budget migration exactly
+    (``tests/test_autoscale.py``).
+    """
+    s = pool.next_uid.shape[0]
+    if num_streams < 1:
+        raise ValueError(f"num_streams must be >= 1, got {num_streams}")
+    if num_streams == s:
+        return pool
+    if num_streams < s:
+        return pool._replace(
+            **{f: getattr(pool, f)[:num_streams]
+               for f in ("alive", "age", "hits", "hit_streak",
+                         "time_since_update", "uid")},
+            next_uid=pool.next_uid[:num_streams])
+    grow = ((0, num_streams - s), (0, 0))
+    zero_grow = {f: jnp.pad(getattr(pool, f), grow)
+                 for f in ("age", "hits", "hit_streak", "time_since_update")}
+    return pool._replace(
+        alive=jnp.pad(pool.alive, grow),
+        uid=jnp.pad(pool.uid, grow, constant_values=-1),
+        next_uid=jnp.pad(pool.next_uid, ((0, num_streams - s),),
+                         constant_values=uid_start),
+        **zero_grow)
+
+
 def transpose_pool(pool: SlotPool) -> SlotPool:
     """Swap the slot axis between last (engine layout ``[..., T]``) and
     first (lane layout ``[T, ...]``, slots on sublanes, streams on lanes).

@@ -235,6 +235,44 @@ def reset_ragged(state, reset: jnp.ndarray, uid_start: int = 1):
     return reset_streams(state, reset, uid_start)
 
 
+def resize_streams(state: SortState, num_streams: int) -> SortState:
+    """Migrate an engine-layout state between stream budgets (DESIGN.md
+    §8): the state-level half of elastic lane budgets.
+
+    * **grow** — append streams and run them through the masked re-init
+      (:func:`reset_streams` with the tail selected), so every new stream
+      is bit-identical to a freshly ``init``-ed one: zero means, initial
+      covariance, empty pool, fresh uid namespace, ``frame_count=0``.
+    * **shrink** — drop the trailing streams.  The caller owns the drain
+      protocol: the scheduler only shrinks once the evacuating lanes hold
+      no live sequence, so nothing observable is ever sliced away.
+
+    Kept streams are untouched bit for bit in both directions — a lane
+    mid-sequence survives the migration exactly, which is what makes an
+    elastic run bit-identical to a fixed-budget run.
+    """
+    s = state.frame_count.shape[0]
+    if num_streams < 1:
+        raise ValueError(f"num_streams must be >= 1, got {num_streams}")
+    if num_streams == s:
+        return state
+    if num_streams < s:
+        return SortState(
+            x=state.x[:num_streams], p=state.p[:num_streams],
+            pool=slots.resize_pool(state.pool, num_streams),
+            frame_count=state.frame_count[:num_streams])
+    grow = num_streams - s
+    wide = SortState(
+        x=jnp.pad(state.x, ((0, grow), (0, 0), (0, 0))),
+        p=jnp.pad(state.p, ((0, grow), (0, 0), (0, 0), (0, 0))),
+        pool=slots.resize_pool(state.pool, num_streams),
+        frame_count=jnp.pad(state.frame_count, ((0, grow),)))
+    # masked re-init of exactly the appended tail: the padded x/p above are
+    # placeholders; reset_streams writes the true init values (initial
+    # covariance included), reusing the scheduler's recycling primitive.
+    return reset_streams(wide, jnp.arange(num_streams) >= s)
+
+
 class SortOutput(NamedTuple):
     boxes: jnp.ndarray    # [S, T, 4] xyxy of every slot (post update/birth)
     uid: jnp.ndarray      # [S, T] track id, -1 if dead
@@ -442,6 +480,27 @@ class SortEngine:
         lane = LaneSortState(x3.reshape(kalman.DIM_X, t * sp),
                              p3.reshape(49, t * sp), pool, frame_count)
         return lane, out
+
+    def resize_ragged(self, state, num_lanes: int, new_num_lanes: int):
+        """Migrate a ragged serving state between lane budgets (DESIGN.md
+        §8).  ``num_lanes`` is the state's current budget (the fused
+        :class:`LaneSortState` cannot tell its real lane count from its
+        padded one, so the caller supplies it); ``new_num_lanes`` the
+        target.  Grow re-initialises the appended lanes via the masked
+        re-init; shrink drops the tail — the caller (the scheduler's
+        shrink-by-drain protocol) guarantees those lanes are vacant.
+
+        Both layouts migrate through the engine layout using the exact
+        :func:`sort_state_of` / :func:`lane_state_of` inverses, so kept
+        lanes — including lanes mid-sequence — are bit-identical before
+        and after.  Runs outside the jitted chunk scan: a migration is a
+        rare host-boundary event, never a per-step cost.
+        """
+        if self.config.use_kernels:
+            eng_state = sort_state_of(state, num_lanes)
+            return lane_state_of(resize_streams(eng_state, new_num_lanes),
+                                 self._block_s)
+        return resize_streams(state, new_num_lanes)
 
     # ------------------------------------------------------ ragged stepping
     def init_ragged(self, num_lanes: int):

@@ -6,4 +6,4 @@ serving traffic is an unbounded set of sequences with ragged lengths
 multiplexes that traffic onto the engine's fixed lane budget with exact
 lane recycling (DESIGN.md §3).
 """
-from .scheduler import StreamScheduler  # noqa: F401
+from .scheduler import StreamScheduler, lane_ladder  # noqa: F401

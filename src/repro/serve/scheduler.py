@@ -34,6 +34,13 @@ fixed budget of ``num_lanes`` engine lanes (DESIGN.md §3):
   and bit-identical outputs (``tests/test_device_sharding.py``).  Host-
   side planning is unchanged; chunk operands are placed with
   ``NamedSharding`` so the jitted scan never inserts a resharding copy.
+* **Elastic lane budgets** (DESIGN.md §8): pass ``min_lanes``/``max_lanes``
+  and the budget resizes itself between chunks over a pre-compiled ladder
+  of power-of-two widths — grow is immediate (appended lanes are a masked
+  re-init), shrink waits for the evacuating lanes to drain, and migrated
+  lanes (including lanes mid-sequence) survive the move bit for bit, so
+  an elastic run's per-sequence outputs equal a fixed ``max_lanes`` run
+  (``tests/test_autoscale.py``).
 """
 from __future__ import annotations
 
@@ -48,6 +55,30 @@ import numpy as np
 from repro.core import slots, sort as sort_mod
 from repro.core.sort import SortEngine
 from repro.data.stream import ReorderBuffer, SequenceTracks
+
+
+def lane_ladder(min_lanes: int, max_lanes: int) -> tuple[int, ...]:
+    """The pre-compiled width ladder (DESIGN.md §8): power-of-two
+    multiples of ``min_lanes`` up to ``max_lanes``.
+
+    Every resize lands on a ladder width, so the chunk scan compiles at
+    most once per width and never again — ``max_lanes`` must therefore be
+    ``min_lanes * 2**k`` exactly (a width off the ladder would force a
+    fresh compile at resize time, the thing the ladder exists to avoid).
+    """
+    if min_lanes < 1:
+        raise ValueError(f"min_lanes must be >= 1, got {min_lanes}")
+    if max_lanes < min_lanes:
+        raise ValueError(f"max_lanes={max_lanes} must be >= "
+                         f"min_lanes={min_lanes}")
+    widths = [min_lanes]
+    while widths[-1] < max_lanes:
+        widths.append(widths[-1] * 2)
+    if widths[-1] != max_lanes:
+        raise ValueError(
+            f"max_lanes={max_lanes} must be min_lanes * 2**k "
+            f"(min_lanes={min_lanes} reaches {widths[-2]} or {widths[-1]})")
+    return tuple(widths)
 
 
 @dataclasses.dataclass
@@ -89,38 +120,97 @@ class StreamScheduler:
     ``submit`` may be called again after ``run`` returns; lane state
     persists but every admission starts from a masked re-init, so earlier
     traffic cannot leak into later sequences.
+
+    **Elastic mode** (DESIGN.md §8): pass ``min_lanes``/``max_lanes`` and
+    the budget autoscales over the pre-compiled ladder
+    (:func:`lane_ladder`) between chunks.  Resize policy knobs:
+
+    * ``min_lanes`` / ``max_lanes`` — the ladder bounds; ``max_lanes``
+      must be ``min_lanes * 2**k``.  ``num_lanes`` (optional here) picks
+      the starting width, default ``min_lanes``.
+    * **grow** is demand-driven and immediate: when occupied lanes plus
+      queue depth exceed the current width, the budget steps up to the
+      smallest ladder width covering demand before the next chunk is
+      planned (appended lanes are a masked re-init).
+    * **shrink** is utilization-driven and patient: when demand fits a
+      smaller ladder width for ``shrink_patience`` consecutive chunk
+      boundaries (hysteresis against bursty arrivals), admissions to the
+      evacuating lanes stop, and the budget drops only once those lanes
+      have drained — no live sequence is ever moved or cancelled.
+    * ``precompile`` — compile every ladder width's chunk program at
+      construction (on throwaway all-inactive chunks), so a mid-burst
+      resize never pays compile latency.  Repeated resizes never retrace
+      a compiled width either way (``trace_log`` records one entry per
+      chunk-shape trace; ``tests/test_autoscale.py`` locks this).
+    * :meth:`request_width` — pin a target width (tests, external
+      autoscalers); it overrides the demand policy until released with
+      ``request_width(None)``.  A pinned shrink still waits for the
+      evacuating lanes to drain.
     """
 
-    def __init__(self, engine: SortEngine, num_lanes: int,
+    def __init__(self, engine: SortEngine, num_lanes: Optional[int] = None,
                  max_dets: Optional[int] = None, chunk: int = 32,
-                 mesh=None):
+                 mesh=None, *, min_lanes: Optional[int] = None,
+                 max_lanes: Optional[int] = None, shrink_patience: int = 2,
+                 precompile: bool = True):
+        self.elastic = min_lanes is not None or max_lanes is not None
+        if self.elastic:
+            if min_lanes is None or max_lanes is None:
+                raise ValueError(
+                    "elastic mode needs both min_lanes and max_lanes")
+            self.ladder = lane_ladder(min_lanes, max_lanes)
+            num_lanes = self.ladder[0] if num_lanes is None else num_lanes
+            if num_lanes not in self.ladder:
+                raise ValueError(
+                    f"num_lanes={num_lanes} must be a ladder width "
+                    f"{self.ladder}")
+            if shrink_patience < 1:
+                raise ValueError(f"shrink_patience must be >= 1, got "
+                                 f"{shrink_patience}")
+        else:
+            if num_lanes is None:
+                raise ValueError("num_lanes is required for a fixed budget "
+                                 "(pass min_lanes/max_lanes for elastic)")
+            self.ladder = (num_lanes,)
         if num_lanes < 1:
             raise ValueError(f"num_lanes must be >= 1, got {num_lanes}")
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.engine = engine
-        self.num_lanes = num_lanes
+        self.num_lanes = num_lanes      # CURRENT width (mutates in elastic)
         self.max_dets = max_dets or engine.config.max_detections
         self.chunk = chunk
         self.mesh = mesh
+        self.shrink_patience = shrink_patience
 
         self._pending: collections.deque[_Seq] = collections.deque()
         self._occupant: list[Optional[_Seq]] = [None] * num_lanes
         self._cursor = [0] * num_lanes
         self._ready = ReorderBuffer()
         self._num_submitted = 0
+        self._shrink_target: Optional[int] = None   # evacuating toward this
+        self._shrink_votes = 0                      # hysteresis counter
+        self._forced_width: Optional[int] = None    # request_width override
 
         # serving counters (benchmarks/ragged.py reads these)
         self.frames_processed = 0      # real sequence frames stepped
         # lanes x steps that carried any planned work: steps of a chunk
         # whose `active` mask is all-False (the tail of a draining final
         # chunk) are excluded, so `utilization` measures lane occupancy of
-        # working steps rather than being diluted by drain padding.
+        # working steps rather than being diluted by drain padding.  The
+        # lane factor is the width ACTIVE at each chunk, not the
+        # construction width (elastic mode resizes between chunks).
         self.lane_steps = 0
         self.chunks_run = 0
         self.admissions: list[tuple[int, int]] = []  # (seq index, step)
+        self.resizes: list[tuple[int, int, int]] = []  # (chunk, old, new)
+        # one entry (the traced lane width; per-shard width in mesh mode)
+        # per chunk-program trace — the recompilation probe: repeated
+        # grow/shrink cycles must never retrace a compiled ladder width.
+        self.trace_log: list[int] = []
 
         def chunk_fn(state, det, dm, active, reset):
+            self.trace_log.append(det.shape[1])    # runs at trace time only
             def body(st, inp):
                 d, m, a, r = inp
                 # recycle + admitted sequence's first frame: same fused step
@@ -130,17 +220,31 @@ class StreamScheduler:
 
         if mesh is None:
             self._sharding = None
+            self._shardings = None
             self._state = engine.init_ragged(num_lanes)
             self._chunk_fn = jax.jit(chunk_fn)
         else:
             # lanes -> mesh (DESIGN.md §7): validate the lane budget splits
-            # evenly, shard the resident state, and wrap the identical
-            # chunk scan in shard_map — planning above stays host-side and
-            # device-count-agnostic.
-            from repro.sharding.lanes import LaneSharding
-            self._sharding = LaneSharding(engine, mesh, num_lanes)
+            # evenly (every ladder width, so no resize can fail later),
+            # shard the resident state, and wrap the identical chunk scan
+            # in shard_map — planning above stays host-side and
+            # device-count-agnostic.  One jitted chunk program serves all
+            # widths: the PartitionSpecs depend on state structure, not
+            # lane count, so each width is just one more shape in its
+            # cache.
+            from repro.sharding.lanes import LaneSharding, shard_count
+            n = shard_count(mesh)
+            for w in self.ladder:
+                if w % n != 0:
+                    raise ValueError(
+                        f"ladder width {w} (of {self.ladder}) must divide "
+                        f"evenly over the {n}-device lane mesh")
+            self._shardings: dict[int, LaneSharding] = {}
+            self._sharding = self._sharding_for(num_lanes)
             self._state = self._sharding.init()
             self._chunk_fn = jax.jit(self._sharding.shard_chunk(chunk_fn))
+        if self.elastic and precompile:
+            self._precompile_ladder()
 
     # --------------------------------------------------------------- intake
     def submit(self, name: str, det_boxes: np.ndarray,
@@ -192,14 +296,138 @@ class StreamScheduler:
         no lanes hostage, they only pad the final ``lax.scan``."""
         return self.frames_processed / max(self.lane_steps, 1)
 
+    # ------------------------------------------------------------- elastic
+    def _sharding_for(self, width: int):
+        """The (cached) :class:`LaneSharding` for one ladder width."""
+        from repro.sharding.lanes import LaneSharding
+        if width not in self._shardings:
+            self._shardings[width] = LaneSharding(self.engine, self.mesh,
+                                                  width)
+        return self._shardings[width]
+
+    def _precompile_ladder(self) -> None:
+        """Compile every ladder width's chunk program up front.
+
+        Each width is traced on a throwaway freshly-init state with
+        all-inactive operands — an inactive step is an exact no-op
+        (DESIGN.md §3.2), so warm-up never touches serving state, and the
+        operands carry exactly the dtypes/shardings real chunks use, so
+        the first real chunk at any width is a cache hit.
+        """
+        c, d = self.chunk, self.max_dets
+        for w in self.ladder:
+            det = np.zeros((c, w, d, 4), np.float32)
+            dm = np.zeros((c, w, d), bool)
+            idle = np.zeros((c, w), bool)
+            if self._sharding is not None:
+                sh = self._sharding_for(w)
+                state = self._state if w == self.num_lanes else sh.init()
+                operands = sh.place(det, dm, idle, idle)
+            else:
+                state = (self._state if w == self.num_lanes
+                         else self.engine.init_ragged(w))
+                operands = tuple(jnp.asarray(a)
+                                 for a in (det, dm, idle, idle))
+            self._chunk_fn(state, *operands)
+
+    def request_width(self, width: Optional[int]) -> None:
+        """Pin the budget to ``width`` (a ladder width), overriding the
+        demand policy until released with ``request_width(None)`` or
+        superseded by a new pin: grow applies before the next chunk;
+        shrink engages the drain protocol immediately (no hysteresis) but
+        still waits for the evacuating lanes to empty — queued sequences
+        re-queue into the surviving lanes, FIFO order intact.  Tests and
+        external autoscalers use this; normal serving relies on the
+        built-in policy."""
+        if not self.elastic:
+            raise ValueError("request_width needs an elastic scheduler "
+                             "(min_lanes/max_lanes)")
+        if width is not None and width not in self.ladder:
+            raise ValueError(f"width {width} not on the ladder {self.ladder}")
+        self._forced_width = width
+
+    def _target_width(self) -> int:
+        """Smallest ladder width covering current demand (occupied lanes
+        plus queue depth) — the width at which the next chunk would run at
+        the highest lane utilization without queueing admissible work."""
+        occupied = sum(o is not None for o in self._occupant)
+        demand = occupied + len(self._pending)
+        for w in self.ladder:
+            if w >= demand:
+                return w
+        return self.ladder[-1]
+
+    def _maybe_resize(self) -> None:
+        """Resize policy, run once per chunk boundary (before planning).
+
+        Grow is immediate; shrink requires ``shrink_patience`` consecutive
+        under-demand boundaries, then marks lanes ``>= target`` as
+        evacuating (no further admissions) and applies only once they have
+        all drained — so the budget never drops while a live sequence
+        occupies a doomed lane, and uids never alias (recycling semantics
+        are untouched)."""
+        if not self.elastic:
+            return
+        forced = self._forced_width
+        target = forced if forced is not None else self._target_width()
+        if target > self.num_lanes:
+            self._shrink_target = None           # growth cancels evacuation
+            self._shrink_votes = 0
+            self._apply_resize(target)
+        elif target < self.num_lanes:
+            self._shrink_votes = (self.shrink_patience if forced is not None
+                                  else self._shrink_votes + 1)
+            if self._shrink_votes >= self.shrink_patience:
+                self._shrink_target = target
+        else:
+            self._shrink_votes = 0
+            self._shrink_target = None
+        if self._shrink_target is not None and all(
+                o is None for o in self._occupant[self._shrink_target:]):
+            self._apply_resize(self._shrink_target)
+            self._shrink_target = None
+            self._shrink_votes = 0
+
+    def _apply_resize(self, new_width: int) -> None:
+        """Migrate the resident state to ``new_width`` lanes at a chunk
+        boundary.  Kept lanes (including lanes mid-sequence) move bit for
+        bit; appended lanes are a masked re-init; in mesh mode the
+        migrated state is re-placed with the new width's ``NamedSharding``
+        here, so the next chunk starts from committed shardings."""
+        old = self.num_lanes
+        if new_width == old:
+            return
+        if self._sharding is not None:
+            new_sharding = self._sharding_for(new_width)
+            self._state = self._sharding.migrate(self._state, new_sharding)
+            self._sharding = new_sharding
+        else:
+            self._state = self.engine.resize_ragged(self._state, old,
+                                                    new_width)
+        if new_width > old:
+            self._occupant += [None] * (new_width - old)
+            self._cursor += [0] * (new_width - old)
+        else:
+            assert all(o is None for o in self._occupant[new_width:]), \
+                "shrink applied before the evacuating lanes drained"
+            del self._occupant[new_width:]
+            del self._cursor[new_width:]
+        self.num_lanes = new_width
+        self.resizes.append((self.chunks_run, old, new_width))
+
     # ------------------------------------------------------------- planning
     def _plan_chunk(self):
         """Plan the next ``chunk`` steps of the lane schedule on the host.
 
         Admission is data-independent (it depends only on queue order and
         sequence lengths), so the whole chunk — including mid-chunk
-        recycling — is planned before anything is dispatched."""
+        recycling — is planned before anything is dispatched.  While a
+        shrink is evacuating, lanes at or beyond the target width take no
+        new admissions (their occupants run to completion); queued
+        sequences keep admitting FIFO into the surviving lanes."""
         c, l, d = self.chunk, self.num_lanes, self.max_dets
+        admit_limit = (l if self._shrink_target is None
+                       else self._shrink_target)
         det = np.zeros((c, l, d, 4), np.float32)
         dm = np.zeros((c, l, d), bool)
         active = np.zeros((c, l), bool)
@@ -207,7 +435,8 @@ class StreamScheduler:
         mapping = []                                  # (t, lane, seq, frame)
         for t in range(c):
             for lane in range(l):
-                if self._occupant[lane] is None and self._pending:
+                if self._occupant[lane] is None and self._pending \
+                        and lane < admit_limit:
                     self._occupant[lane] = self._pending.popleft()
                     self._cursor[lane] = 0
                     reset[t, lane] = True             # recycle in this step
@@ -232,6 +461,7 @@ class StreamScheduler:
         if not self._has_step_work:
             # nothing to dispatch — only buffered completions to release
             return self._ready.pop_ready()
+        self._maybe_resize()
         det, dm, active, reset, mapping = self._plan_chunk()
         if self._sharding is not None:
             operands = self._sharding.place(det, dm, active, reset)

@@ -42,7 +42,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import kalman, slots
-from repro.core.sort import LaneSortState, SortOutput, SortState
+from repro.core.sort import (LaneSortState, SortOutput, SortState,
+                             lane_state_of, resize_streams, sort_state_of)
 
 from .specs import LANE_AXIS, lane_dim_spec, named
 
@@ -218,6 +219,67 @@ class LaneSharding:
                       _chunk_spec(2), _chunk_spec(2)),
             out_specs=out_specs,
             check_vma=False)
+
+    # ----------------------------------------------------------- migration
+    def _to_engine(self, state):
+        """Sharded resident state -> global engine-layout :class:`SortState`
+        holding exactly this sharding's real lanes, in global lane order.
+
+        The fused :class:`MeshLaneState` interleaves per-shard stream
+        padding with real lanes (each device's block is ``lanes_per_shard``
+        real lanes padded to the kernel's stream block), so the lane-minor
+        axis is walked shard by shard and each shard's padding dropped via
+        the exact :func:`repro.core.sort.sort_state_of` inverse.
+        """
+        if not self._fused:
+            return state
+        sp_local = state.frame_count.shape[0] // self.shard_count
+        parts = []
+        for s in range(self.shard_count):
+            local = jax.tree.map(
+                lambda a, s=s: a[..., s * sp_local:(s + 1) * sp_local],
+                state)
+            parts.append(sort_state_of(lane_view(local),
+                                       self.lanes_per_shard))
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+    def _from_engine(self, eng_state):
+        """Global engine-layout state -> this sharding's resident layout
+        (re-inserting the fused path's per-shard stream padding)."""
+        if not self._fused:
+            return eng_state
+        lps = self.lanes_per_shard
+        parts = []
+        for s in range(self.shard_count):
+            local = jax.tree.map(lambda a, s=s: a[s * lps:(s + 1) * lps],
+                                 eng_state)
+            parts.append(mesh_view(lane_state_of(
+                local, self.engine._block_s)))
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=-1), *parts)
+
+    def migrate(self, state, new_sharding: "LaneSharding"):
+        """Move the resident state to ``new_sharding``'s lane budget
+        (DESIGN.md §8) — same mesh, different width.
+
+        The state crosses widths through the global engine layout using
+        the exact layout inverses, so every kept lane (including lanes
+        mid-sequence) is bit-identical after the move; appended lanes are
+        freshly re-initialised (``core.sort.resize_streams``).  The result
+        is re-placed with the new width's ``NamedSharding`` **here**, at
+        the chunk boundary — the jitted chunk scan always starts from
+        committed lane shardings and never pays a resharding copy
+        mid-chunk (``tests/test_autoscale.py`` asserts the placement).
+        """
+        if new_sharding.mesh is not self.mesh \
+                and new_sharding.mesh != self.mesh:
+            raise ValueError("migrate() moves state between widths of the "
+                             "same mesh, not between meshes")
+        eng_state = resize_streams(self._to_engine(state),
+                                   new_sharding.num_lanes)
+        new_state = new_sharding._from_engine(eng_state)
+        new_sharding._state_specs = state_pspecs(new_state)
+        return jax.device_put(new_state,
+                              named(new_sharding._state_specs, self.mesh))
 
     # ----------------------------------------------------------- placement
     def place(self, det, dm, active, reset):
