@@ -1,0 +1,56 @@
+"""Machine-readable benchmark artifacts — the ``BENCH_<name>.json`` trail.
+
+The CSV the suite driver prints is for eyeballs; this module gives every
+benchmark a machine-diffable artifact so future PRs can compare against a
+*recorded* perf trajectory instead of re-deriving baselines from logs.
+``benchmarks/run.py --json [DIR]`` turns it on for every section that
+supports it (speedup, ragged, device_scaling, autoscale,
+dispatch_overhead); each standalone ``__main__`` writes next to the CSV.
+
+Schema (``schema_version`` 1) — one JSON object per benchmark::
+
+    {
+      "benchmark": "<name>",
+      "schema_version": 1,
+      "config": {<the run()'s knobs, so a diff knows the workload>},
+      "metrics": {"<row_name>": {"value": <float>, "derived": "<str>"}},
+      "timestamp": <unix seconds>
+    }
+
+``metrics`` keys are exactly the CSV row names, so the two outputs
+cross-reference trivially.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+SCHEMA_VERSION = 1
+
+
+def _jsonable(v):
+    if isinstance(v, (tuple, list)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, (int, float, str, bool, type(None))):
+        return v
+    return str(v)
+
+
+def write_bench(name: str, config: dict, rows, out_dir: str = ".") -> str:
+    """Write ``rows`` (``[(row_name, value, derived), ...]`` — the exact
+    list a benchmark ``run()`` returns) as ``out_dir/BENCH_<name>.json``;
+    returns the written path."""
+    doc = {
+        "benchmark": name,
+        "schema_version": SCHEMA_VERSION,
+        "config": {k: _jsonable(v) for k, v in dict(config).items()},
+        "metrics": {row_name: {"value": float(value), "derived": str(derived)}
+                    for row_name, value, derived in rows},
+        "timestamp": time.time(),
+    }
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

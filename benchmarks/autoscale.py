@@ -92,7 +92,8 @@ def _mean_width(sched) -> float:
 
 def run(light: int = 2, heavy: int = 12, frames: int = 60,
         min_lanes: int = 2, max_lanes: int = 8, chunk: int = 8,
-        seed: int = 0, repeats: int = 2, use_kernels: bool = True):
+        seed: int = 0, repeats: int = 2, use_kernels: bool = True,
+        json_dir: str | None = None):
     if repeats < 1:
         raise ValueError(f"repeats must be >= 1 (rep 0 only warms the "
                          f"jit and is never timed), got {repeats}")
@@ -130,7 +131,7 @@ def run(light: int = 2, heavy: int = 12, frames: int = 60,
 
     fps = {k: real_frames / t for k, t in
            (("min", t_min), ("max", t_max), ("el", t_el))}
-    return [
+    rows = [
         ("autoscale/fixed_min_us_per_frame", t_min / real_frames * 1e6,
          f"fps={fps['min']:,.0f} lanes={min_lanes} util={u_min:.0%}"),
         ("autoscale/fixed_max_us_per_frame", t_max / real_frames * 1e6,
@@ -144,8 +145,17 @@ def run(light: int = 2, heavy: int = 12, frames: int = 60,
         ("autoscale/elastic_vs_fixed_max", u_el / max(u_max, 1e-9),
          "lane-utilization ratio (elastic right-sizes the quiet phases)"),
     ]
+    if json_dir is not None:
+        from benchmarks._record import write_bench
+        write_bench("autoscale",
+                    dict(light=light, heavy=heavy, frames=frames,
+                         min_lanes=min_lanes, max_lanes=max_lanes,
+                         chunk=chunk, seed=seed, repeats=repeats,
+                         use_kernels=use_kernels),
+                    rows, json_dir)
+    return rows
 
 
 if __name__ == "__main__":
-    for name, value, derived in run():
+    for name, value, derived in run(json_dir="."):
         print(f"{name},{value:.4f},{derived}")

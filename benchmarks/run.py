@@ -7,40 +7,60 @@ Prints ``name,us_per_call,derived`` CSV.  Table mapping:
 * Table V   -> benchmarks.speedup    (per-op Python vs fused batched JAX)
 * Table VI  -> benchmarks.scaling    (strong vs weak vs throughput)
 
+``--json [DIR]`` additionally writes ``BENCH_<name>.json`` artifacts
+(schema in ``benchmarks/_record.py``) for the sections that support
+them: speedup, ragged, autoscale, device_scaling, dispatch_overhead.
+
 Roofline (§Roofline, from the dry-run) lives in ``benchmarks.roofline`` —
 run it separately after ``repro.launch.dryrun``.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import (association_ablation, autoscale, datasets,
-                            device_scaling, kernel_ai, ragged, scaling,
-                            speedup)
+                            device_scaling, dispatch_overhead, kernel_ai,
+                            ragged, scaling, speedup)
 
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="Run every benchmark section; prints CSV to stdout.")
+    ap.add_argument(
+        "--json", nargs="?", const=".", default=None, metavar="DIR",
+        help="also write BENCH_<name>.json artifacts to DIR (default: cwd) "
+             "for the sections that support them")
+    args = ap.parse_args(argv)
+
+    # (section, run_fn, emits BENCH_<name>.json under --json)
     sections = [
-        ("tableI", datasets.run),
-        ("tableIV", kernel_ai.run),
-        ("tableV", speedup.run),
-        ("tableVI", scaling.run),
-        ("ragged", ragged.run),
-        ("ablation", association_ablation.run),
+        ("tableI", datasets.run, False),
+        ("tableIV", kernel_ai.run, False),
+        ("tableV", speedup.run, True),
+        ("tableVI", scaling.run, False),
+        ("ragged", ragged.run, True),
+        ("ablation", association_ablation.run, False),
         # elastic vs fixed lane budgets on a bursty 4-phase arrival trace
         # (DESIGN.md §8)
-        ("autoscale", autoscale.run),
+        ("autoscale", autoscale.run, True),
         # reports per-device rows only up to jax.device_count(); export
         # XLA_FLAGS=--xla_force_host_platform_device_count=8 for the full
         # {1,2,4,8} sweep on CPU (DESIGN.md §7)
-        ("devices", device_scaling.run),
+        ("devices", device_scaling.run, True),
+        # per-frame scan vs chunk-resident megakernel dispatch accounting
+        # (DESIGN.md §9)
+        ("dispatch", dispatch_overhead.run, True),
     ]
     print("name,us_per_call,derived")
     failed = 0
-    for name, fn in sections:
+    for name, fn, emits_json in sections:
+        kwargs = ({"json_dir": args.json}
+                  if (args.json is not None and emits_json) else {})
         try:
-            for row_name, value, derived in fn():
+            for row_name, value, derived in fn(**kwargs):
                 print(f"{row_name},{value:.4f},{derived}")
                 sys.stdout.flush()
         except Exception:

@@ -1,0 +1,47 @@
+"""Named ``SortConfig`` presets for the MOT15-shaped workload.
+
+The paper's Table I sequences carry at most 13 simultaneous objects, so
+every preset sizes the slot pool at ``max_trackers=16`` (a full 128-lane
+stream block at the default ``block_b=2048``, DESIGN.md §2.3) and pads
+detections to 16.  Pick by execution strategy:
+
+* ``BASELINE``   — legacy per-phase engine path (pure jnp, no kernels);
+  the correctness anchor everything else is bit-compared against.
+* ``FUSED``      — lane-persistent fused frame path (DESIGN.md §2):
+  one predict/IoU/assign/update dispatch per frame.
+* ``MEGAKERNEL`` — chunk-resident megakernel (DESIGN.md §9): the fused
+  path at chunk granularity — a whole planned serving chunk runs as ONE
+  ``pallas_call`` with the frame loop on the kernel grid, so dispatches
+  per chunk drop from F to 1.  Outputs are bit-identical to both presets
+  above (tests/test_oracle_parity.py, tests/test_scheduler.py).
+* ``MEGAKERNEL_GREEDY`` — megakernel with in-kernel greedy association
+  (no host-side Hungarian pre-pass feeding the kernel; DESIGN.md §6).
+
+Usage::
+
+    import sys; sys.path.insert(0, "configs")
+    from sort_mot import MEGAKERNEL
+    from repro.core import SortEngine
+    engine = SortEngine(MEGAKERNEL)
+"""
+from repro.core import SortConfig
+
+BASELINE = SortConfig(max_trackers=16, max_detections=16,
+                      use_kernels=False)
+
+FUSED = SortConfig(max_trackers=16, max_detections=16,
+                   use_kernels=True)
+
+MEGAKERNEL = SortConfig(max_trackers=16, max_detections=16,
+                        use_kernels=True, chunk_kernel=True)
+
+MEGAKERNEL_GREEDY = SortConfig(max_trackers=16, max_detections=16,
+                               use_kernels=True, chunk_kernel=True,
+                               assoc="greedy")
+
+PRESETS = {
+    "baseline": BASELINE,
+    "fused": FUSED,
+    "megakernel": MEGAKERNEL,
+    "megakernel-greedy": MEGAKERNEL_GREEDY,
+}

@@ -74,6 +74,14 @@ def main():
                     help="lane-persistent fused frame path "
                          "(SortConfig.use_kernels=True): one kernel "
                          "dispatch per frame")
+    ap.add_argument("--chunk-kernel", action="store_true",
+                    help="chunk-resident megakernel (DESIGN.md §9, "
+                         "SortConfig.chunk_kernel=True; implies --fused): "
+                         "each planned --chunk-frame serving chunk runs "
+                         "as ONE kernel dispatch with lane state resident "
+                         "across the in-kernel frame loop — bit-identical "
+                         "outputs, F-to-1 dispatch reduction "
+                         "(configs/sort_mot.py::MEGAKERNEL)")
     ap.add_argument("--assoc", choices=("hungarian", "greedy"),
                     default="hungarian",
                     help="association algorithm (DESIGN.md §6): "
@@ -93,7 +101,9 @@ def main():
 
     d = max(db.shape[1] for _, db, _ in seqs)
     eng = SortEngine(SortConfig(max_trackers=16, max_detections=d,
-                                use_kernels=args.fused, assoc=args.assoc))
+                                use_kernels=args.fused or args.chunk_kernel,
+                                chunk_kernel=args.chunk_kernel,
+                                assoc=args.assoc))
     mesh = lane_mesh(args.devices) if args.devices > 1 else None
     min_lanes = max_lanes = None
     if args.autoscale:
@@ -118,8 +128,9 @@ def main():
                           tracks.boxes, tracks.uid, tracks.emit)
         total_frames += tracks.num_frames
     dt = time.perf_counter() - t_start
-    mode = ("fused lane-persistent" if args.fused else "per-phase") \
-        + f" / {args.assoc}"
+    mode = ("chunk-resident megakernel" if args.chunk_kernel
+            else "fused lane-persistent" if args.fused
+            else "per-phase") + f" / {args.assoc}"
     if args.devices > 1:
         mode += f" / {args.devices}-device lane mesh"
     lanes_str = f"{args.lanes} lanes"

@@ -56,10 +56,17 @@ def process_noise(dtype=jnp.float32) -> jnp.ndarray:
     return jnp.asarray(q, dtype)
 
 
-def initial_covariance(dtype=jnp.float32) -> jnp.ndarray:
+def initial_covariance_np() -> np.ndarray:
+    """Host-side :func:`initial_covariance` — the chunk megakernel body
+    needs the entries as Python scalars (Pallas kernels may not capture
+    non-scalar constants), so the values live here, numpy-first."""
     p = np.eye(DIM_X) * 10.0
     p[4, 4] = p[5, 5] = p[6, 6] = 1e4  # high uncertainty on unobserved velocities
-    return jnp.asarray(p, dtype)
+    return p
+
+
+def initial_covariance(dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(initial_covariance_np(), dtype)
 
 
 class KalmanParams(NamedTuple):

@@ -66,6 +66,13 @@ class SortConfig:
     # block_b // max_trackers (DESIGN.md §2.3) — the default gives a full
     # 128-lane stream block at T=16, matching the TPU lane tile.
     block_b: int = 2048
+    # True -> chunk-resident megakernel (DESIGN.md §9): run_chunk_ragged
+    # executes a whole planned serving chunk (F frames) as ONE pallas_call
+    # with the frame loop on the kernel grid and lane state VMEM-resident
+    # across the chunk — dispatches per chunk drop from F to 1, outputs
+    # stay bit-identical.  Requires use_kernels=True (it is the fused lane
+    # path at chunk granularity).
+    chunk_kernel: bool = False
 
 
 class SortState(NamedTuple):
@@ -235,6 +242,42 @@ def reset_ragged(state, reset: jnp.ndarray, uid_start: int = 1):
     return reset_streams(state, reset, uid_start)
 
 
+def chunk_state_of(lane: LaneSortState):
+    """Persistent lane layout -> the megakernel's flat numeric
+    :class:`repro.kernels.ref.ChunkState` (DESIGN.md §9): free reshapes of
+    ``x``/``p`` into the ``[*, T, S_pad]`` view, lifecycle cast to int32,
+    per-stream counters given a unit sublane axis.  Exact inverse of
+    :func:`lane_state_of_chunk`."""
+    from repro.kernels import ref as kref
+
+    t = lane.pool.alive.shape[0]
+    sp = lane.frame_count.shape[0]
+    return kref.ChunkState(
+        x=lane.x.reshape(kalman.DIM_X, t, sp),
+        p=lane.p.reshape(49, t, sp),
+        alive=lane.pool.alive.astype(jnp.int32),
+        age=lane.pool.age, hits=lane.pool.hits,
+        hit_streak=lane.pool.hit_streak,
+        time_since_update=lane.pool.time_since_update,
+        uid=lane.pool.uid,
+        next_uid=lane.pool.next_uid[None, :],
+        frame_count=lane.frame_count[None, :])
+
+
+def lane_state_of_chunk(cs) -> LaneSortState:
+    """The megakernel's :class:`~repro.kernels.ref.ChunkState` back to the
+    persistent lane layout (exact inverse of :func:`chunk_state_of`)."""
+    t = cs.alive.shape[0]
+    sp = cs.frame_count.shape[1]
+    pool = slots.SlotPool(
+        alive=cs.alive > 0, age=cs.age, hits=cs.hits,
+        hit_streak=cs.hit_streak, time_since_update=cs.time_since_update,
+        uid=cs.uid, next_uid=cs.next_uid[0])
+    return LaneSortState(x=cs.x.reshape(kalman.DIM_X, t * sp),
+                         p=cs.p.reshape(49, t * sp), pool=pool,
+                         frame_count=cs.frame_count[0])
+
+
 def resize_streams(state: SortState, num_streams: int) -> SortState:
     """Migrate an engine-layout state between stream budgets (DESIGN.md
     §8): the state-level half of elastic lane budgets.
@@ -304,6 +347,11 @@ class SortEngine:
                 "use_kernels=True runs the fused lane-persistent frame "
                 "kernel; per-phase injections only apply to the non-fused "
                 "path (set use_kernels=False).")
+        if config.chunk_kernel and not config.use_kernels:
+            raise ValueError(
+                "chunk_kernel=True is the chunk-resident megakernel over "
+                "the fused lane path (DESIGN.md §9); it requires "
+                "use_kernels=True.")
         self.config = config
         self.params = kalman.KalmanParams.default(jnp.dtype(config.dtype))
         # stream padding only buys anything on TPU, where it must match the
@@ -514,7 +562,8 @@ class SortEngine:
         return state
 
     def step_ragged(self, state, det_boxes: jnp.ndarray,
-                    det_mask: jnp.ndarray, active: jnp.ndarray):
+                    det_mask: jnp.ndarray, active: jnp.ndarray,
+                    frame_mode: str = "auto"):
         """One frame for a ragged multiplex of sequences over fixed lanes.
 
         ``det_boxes [L, D, 4]``, ``det_mask [L, D]``, ``active [L]`` bool:
@@ -527,10 +576,13 @@ class SortEngine:
         ``state`` is whatever :meth:`init_ragged` returned for this engine
         (``LaneSortState`` on the fused path, masked within the single
         dispatch; ``SortState`` on the per-phase path, masked around
-        :meth:`step`).
+        :meth:`step`).  ``frame_mode`` forces the fused path's kernel
+        backend (``kernels.ops.frame_step``'s ``mode``); the per-phase
+        path has no kernel to force and ignores it.
         """
         if self.config.use_kernels:
             return self.lane_step(state, det_boxes, det_mask,
+                                  frame_mode=frame_mode,
                                   stream_active=active)
 
         a1 = active[:, None]                                     # [L, 1]
@@ -545,6 +597,70 @@ class SortEngine:
         out = out._replace(emit=out.emit & a1,
                            matched_det=out.matched_det & a1)
         return masked, out
+
+    # ------------------------------------------------------ chunked stepping
+    def run_chunk_ragged(self, state, det_boxes: jnp.ndarray,
+                         det_mask: jnp.ndarray, active: jnp.ndarray,
+                         reset: jnp.ndarray, mode: str = "auto"):
+        """One planned serving chunk — ``F`` ragged steps — in a single
+        call: the scheduler's dispatch unit (DESIGN.md §3/§9).
+
+        ``det_boxes [F, L, D, 4]``, ``det_mask [F, L, D]``, ``active
+        [F, L]`` bool, ``reset [F, L]`` bool — the host-planned admission
+        schedule; ``reset[f, l]`` recycles lane ``l`` in the same step
+        that carries the admitted sequence's first frame.  Returns
+        ``(state, SortOutput stacked over F)``.
+
+        Semantics are exactly ``F`` iterations of :func:`reset_ragged` +
+        :meth:`step_ragged`.  With ``config.chunk_kernel=False`` (either
+        engine path) that is literally what runs, as one ``lax.scan`` —
+        ``F`` kernel dispatches per chunk on the fused path.  With
+        ``config.chunk_kernel=True`` the whole loop moves inside ONE
+        ``pallas_call`` (``kernels.chunk.fused_chunk``): the frame axis
+        becomes the minor grid dimension, lane state stays VMEM-resident
+        across the chunk, and dispatches per chunk drop from ``F`` to 1
+        (``benchmarks/dispatch_overhead.py``) — bit-identical outputs
+        either way (``tests/test_oracle_parity.py``).  ``mode`` forces
+        the kernel backend as in ``kernels.ops.chunk_step``.
+        """
+        cfg = self.config
+        if not cfg.chunk_kernel:
+            def body(st, inp):
+                d, m, a, r = inp
+                # recycle + admitted sequence's first frame: same step
+                st = reset_ragged(st, r)
+                return self.step_ragged(st, d, m, a, frame_mode=mode)
+
+            return jax.lax.scan(body, state,
+                                (det_boxes, det_mask, active, reset))
+
+        from repro.kernels import ops as kops
+
+        l = active.shape[1]
+        t = cfg.max_trackers
+        sp = state.frame_count.shape[0]
+        dt = state.x.dtype
+        grow = sp - l
+        det_l = jnp.pad(det_boxes.astype(dt),
+                        ((0, 0), (0, grow), (0, 0), (0, 0))
+                        ).transpose(0, 2, 3, 1)               # [F, D, 4, Sp]
+        dm_l = jnp.pad(det_mask, ((0, 0), (0, grow), (0, 0))
+                       ).astype(dt).transpose(0, 2, 1)        # [F, D, Sp]
+        act_l = jnp.pad(active, ((0, 0), (0, grow))
+                        ).astype(dt)[:, None, :]              # [F, 1, Sp]
+        rst_l = jnp.pad(reset, ((0, 0), (0, grow))
+                        ).astype(jnp.int32)[:, None, :]       # [F, 1, Sp]
+        cs, outs = kops.chunk_step(
+            chunk_state_of(state), det_l, dm_l, act_l, rst_l,
+            iou_threshold=cfg.iou_threshold, max_age=cfg.max_age,
+            min_hits=cfg.min_hits, block_s=self._block_s, mode=mode,
+            assoc=cfg.assoc)
+        out = SortOutput(
+            boxes=outs.boxes[..., :l].transpose(0, 3, 1, 2),  # [F, L, T, 4]
+            uid=outs.uid[..., :l].transpose(0, 2, 1),
+            emit=outs.emit[..., :l].transpose(0, 2, 1),
+            matched_det=outs.matched_det[..., :l].transpose(0, 2, 1))
+        return lane_state_of_chunk(cs), out
 
     # -------------------------------------------------------------------- run
     def run(self, state: SortState, frames: jnp.ndarray,

@@ -1,0 +1,168 @@
+"""Chunk-resident SORT megakernel (Pallas TPU) — one dispatch per CHUNK.
+
+``kernels.frame.fused_frame`` already collapsed each frame to a single
+``pallas_call``, but the serving scheduler still dispatches it F times per
+chunk from a ``lax.scan``: F kernel launches, and 2x F HBM round-trips for
+the ``[49, B]`` covariance block that each launch reads and writes.  With
+the paper's extremely small matrices (7x7 state, tiny IoU grids) that
+per-launch overhead *is* the cost — so this kernel moves the frame loop
+itself inside the ``pallas_call`` (DESIGN.md §9).
+
+Structure: the grid is ``(S // block_s, F)`` with the frame axis as the
+**minor** (fastest, sequential) dimension, i.e. an in-kernel frame loop
+per stream block.
+
+* **Lane-resident state** (``ref.ChunkState``: means, covariances, the
+  int32 lifecycle fields) lives in *revisited output blocks* — their index
+  maps are constant over ``f``, so Pallas keeps the block in VMEM across
+  all F frames and writes it back to HBM once per stream block, not once
+  per frame.  ``@pl.when(f == 0)`` seeds them from the input state refs.
+* **Per-frame operands** — the chunk's detections ``[F, D, 4, S]``, det
+  masks ``[F, D, S]``, ``stream_active``/``reset`` ``[F, 1, S]``, and the
+  optional precomputed ``trk_to_det [F, T, S]`` — use frame-indexed
+  BlockSpecs (leading ``None`` squeezes the frame axis), so the standard
+  Pallas input pipeline double-buffers frame ``f+1``'s slabs in while
+  frame ``f`` computes.
+* **Per-frame outputs** (boxes/uid/emit/assignment) are frame-indexed the
+  same way and stream out as they are produced.
+
+The body is ``ref.step_chunk_lane`` — the exact serving step (masked lane
+re-init + fused frame + lifecycle + emit) in kernel-safe vector algebra —
+so the megakernel is bit-identical to F per-frame dispatches.
+
+VMEM per grid step at T=D=16, block_s=128: the resident state is ~994
+words/lane (x 7x16 + p 49x16 + 6 int slot fields + 2 counters) = ~0.5 MiB
+per copy, ~1 MiB with the input seed; per-frame slabs (det+masks+t2d in,
+boxes+ids out) are ~113 KiB live x2 for double-buffering, and the largest
+intermediate (the [D, T, block_s] IoU) is 128 KiB.  Total < 2 MiB —
+crucially **independent of chunk size F**: frames stream through the minor
+grid axis, so only HBM staging grows with F (~100 KiB/frame).  That is why
+the chunk can be arbitrarily long without revisiting the §2.3 budget.
+
+Association (DESIGN.md §6): greedy runs fully in-kernel (masked argmax
+rounds are vector algebra).  The Hungarian path keeps PR 3's split,
+generalized to chunks: its data-dependent JV augmenting paths stay in a
+jitted jnp pre-pass (``kernels.ops.chunk_step``) and this kernel consumes
+the precomputed per-frame assignment operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .frame import DEFAULT_BLOCK_S
+
+_N_STATE = len(ref.ChunkState._fields)
+
+
+def _chunk_kernel(*refs, iou_threshold: float, max_age: int, min_hits: int,
+                  assoc: str, has_assoc: bool):
+    refs = list(refs)
+    st_in = refs[:_N_STATE]
+    k = _N_STATE
+    det_ref, dm_ref, act_ref, rst_ref = refs[k:k + 4]
+    k += 4
+    t2d_ref = refs[k] if has_assoc else None
+    k += int(has_assoc)
+    st_out = refs[k:k + _N_STATE]
+    boxes_ref, uid_ref, emit_ref, t2d_out_ref, md_ref = refs[k + _N_STATE:]
+
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _seed_state():  # revisited blocks start as garbage; seed once
+        for i_ref, o_ref in zip(st_in, st_out):
+            o_ref[...] = i_ref[...]
+
+    state = ref.ChunkState(*(r[...] for r in st_out))
+    state, outs = ref.step_chunk_lane(
+        state, det_ref[...], dm_ref[...], act_ref[...], rst_ref[...],
+        None if t2d_ref is None else t2d_ref[...],
+        iou_threshold=iou_threshold, max_age=max_age, min_hits=min_hits,
+        assoc=assoc)
+    for o_ref, leaf in zip(st_out, state):
+        o_ref[...] = leaf
+    boxes_ref[...] = outs.boxes
+    uid_ref[...] = outs.uid
+    emit_ref[...] = outs.emit.astype(jnp.int32)
+    t2d_out_ref[...] = outs.trk_to_det
+    md_ref[...] = outs.matched_det.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("iou_threshold", "max_age",
+                                             "min_hits", "assoc", "block_s",
+                                             "interpret"))
+def fused_chunk(state, det, det_mask, active, reset, trk_to_det=None, *,
+                iou_threshold: float = 0.3, max_age: int = 1,
+                min_hits: int = 3, assoc: str = "greedy",
+                block_s: int = DEFAULT_BLOCK_S, interpret: bool = False):
+    """F serving steps for every stream in a single dispatch.
+
+    ``state`` is a :class:`repro.kernels.ref.ChunkState` (``S % block_s
+    == 0``); per-frame operands are ``det [F, D, 4, S]`` xyxy, ``det_mask
+    [F, D, S]`` 0/1 float, ``active [F, 1, S]`` 0/1 float, ``reset
+    [F, 1, S]`` 0/1 int, optional precomputed ``trk_to_det [F, T, S]``
+    int32 (the fused-Hungarian path; with it the in-kernel association is
+    skipped — ``assoc`` then only documents intent).
+
+    Returns ``(ChunkState, ChunkOuts)`` with outputs stacked ``[F, ...]``
+    (``emit``/``matched_det`` as int32 0/1 — the kernel ABI is numeric;
+    ``kernels.ops.chunk_step`` restores bool).
+    """
+    t, s = state.alive.shape
+    f, d = det.shape[0], det.shape[1]
+    assert s % block_s == 0, (s, block_s)
+    if assoc == "hungarian" and trk_to_det is None:
+        raise ValueError(
+            "the Hungarian megakernel path needs the precomputed trk_to_det"
+            " operand (kernels.ops.chunk_step builds it); JV augmenting"
+            " paths don't run inside the kernel (DESIGN.md §6/§9)")
+
+    def resident(*dims):
+        """State block: constant over the frame axis -> VMEM-revisited."""
+        return pl.BlockSpec(dims + (block_s,),
+                            lambda i, fr: (0,) * len(dims) + (i,))
+
+    def per_frame(*dims):
+        """Frame-f slab: leading None squeezes the frame axis; the index
+        map walks it, so the pipeline double-buffers frame f+1's DMA."""
+        return pl.BlockSpec((None,) + dims + (block_s,),
+                            lambda i, fr: (fr,) + (0,) * len(dims) + (i,))
+
+    state_specs = [resident(7, t), resident(49, t)] + [resident(t)] * 6 + \
+                  [resident(1), resident(1)]
+    operands = list(state) + [det, det_mask, active, reset]
+    in_specs = state_specs + [per_frame(d, 4), per_frame(d),
+                              per_frame(1), per_frame(1)]
+    if trk_to_det is not None:
+        operands.append(trk_to_det)
+        in_specs.append(per_frame(t))
+
+    state_shapes = [jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+                    for leaf in state]
+    out_shapes = state_shapes + [
+        jax.ShapeDtypeStruct((f, t, 4, s), state.x.dtype),   # boxes
+        jax.ShapeDtypeStruct((f, t, s), jnp.int32),          # uid
+        jax.ShapeDtypeStruct((f, t, s), jnp.int32),          # emit
+        jax.ShapeDtypeStruct((f, t, s), jnp.int32),          # trk_to_det
+        jax.ShapeDtypeStruct((f, d, s), jnp.int32),          # matched_det
+    ]
+    out_specs = state_specs + [per_frame(t, 4), per_frame(t), per_frame(t),
+                               per_frame(t), per_frame(d)]
+
+    results = pl.pallas_call(
+        functools.partial(_chunk_kernel, iou_threshold=iou_threshold,
+                          max_age=max_age, min_hits=min_hits, assoc=assoc,
+                          has_assoc=trk_to_det is not None),
+        grid=(s // block_s, f),       # frame axis minor: in-kernel loop
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*operands)
+    return (ref.ChunkState(*results[:_N_STATE]),
+            ref.ChunkOuts(*results[_N_STATE:]))

@@ -18,13 +18,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import chunk as _chunk
 from . import frame as _frame
 from . import iou_cost as _iou_kernel
 from . import kalman_fused as _kalman
 from . import ref
 
-__all__ = ["predict", "update", "iou", "frame_step", "engine_fns",
-           "to_lane", "from_lane"]
+__all__ = ["predict", "update", "iou", "frame_step", "chunk_step",
+           "engine_fns", "to_lane", "from_lane"]
 
 
 def _on_tpu() -> bool:
@@ -141,6 +142,56 @@ def frame_step(x, p, det, det_mask, alive, stream_active=None, *,
         iou_threshold=iou_threshold,
         block_s=block_s, interpret=(mode == "interpret"))
     return x, p, t2d, md > 0
+
+
+def chunk_step(state, det, det_mask, active, reset, *,
+               iou_threshold: float = 0.3, max_age: int = 1,
+               min_hits: int = 3, block_s: int = _frame.DEFAULT_BLOCK_S,
+               mode: str = "auto", assoc: str = "greedy"):
+    """Whole-chunk fused serving step: F frames in ONE dispatch
+    (DESIGN.md §9) — the chunk-granularity sibling of :func:`frame_step`.
+
+    Operands in the chunk lane layout: ``state`` is a
+    ``kernels.ref.ChunkState``; ``det [F, D, 4, S]`` xyxy, ``det_mask
+    [F, D, S]`` 0/1 float, ``active [F, 1, S]`` 0/1 float, ``reset
+    [F, 1, S]`` 0/1 int — the scheduler's whole planned chunk, staged up
+    front so the kernel's input pipeline can double-buffer the per-frame
+    slabs.  Returns ``(ChunkState, ChunkOuts)`` with bool ``emit`` /
+    ``matched_det``.
+
+    ``assoc`` (DESIGN.md §6/§9): ``"greedy"`` matches fully in-kernel.
+    ``"hungarian"`` keeps the pattern :func:`frame_step` proved, lifted to
+    chunk scope: the lane-batched JV solves run as a jitted jnp pre-pass
+    whose precomputed ``[F, T, S]`` ``trk_to_det`` enters the kernel as
+    one extra operand.  Assignments at frame ``f`` depend on the state at
+    frame ``f``, so the pre-pass must *replay the chunk's state evolution*
+    — it is the chunk oracle itself (``ref.chunk_lane``), fused by jit
+    into the same device program as the ``pallas_call`` that consumes it.
+
+    ``mode`` as in :func:`frame_step`: ``"auto"`` compiles the megakernel
+    on TPU and runs the chunk oracle elsewhere (on the oracle path the
+    Hungarian pre-pass result IS the answer — nothing runs twice);
+    ``"pallas"`` / ``"interpret"`` / ``"ref"`` force a backend.
+    """
+    if assoc not in ("greedy", "hungarian"):
+        raise ValueError(f"unknown assoc {assoc!r}")
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    kw = dict(iou_threshold=iou_threshold, max_age=max_age,
+              min_hits=min_hits)
+    if mode == "ref":
+        return ref.chunk_lane(state, det, det_mask, active, reset,
+                              assoc=assoc, **kw)
+    t2d_pre = None
+    if assoc == "hungarian":
+        _, pre = ref.chunk_lane(state, det, det_mask, active, reset,
+                                assoc="hungarian", **kw)
+        t2d_pre = pre.trk_to_det
+    new_state, outs = _chunk.fused_chunk(
+        state, det, det_mask, active, reset, t2d_pre, assoc=assoc,
+        block_s=block_s, interpret=(mode == "interpret"), **kw)
+    return new_state, outs._replace(emit=outs.emit > 0,
+                                    matched_det=outs.matched_det > 0)
 
 
 def _hungarian_stage(x, det, det_mask, alive, stream_active,

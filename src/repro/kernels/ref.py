@@ -11,7 +11,11 @@ reference), just transposed.
 """
 from __future__ import annotations
 
+from typing import NamedTuple, Optional
+
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 # SORT filter constants in lane form -------------------------------------
 Q_DIAG = (1.0, 1.0, 1.0, 1.0, 0.01, 0.01, 1e-4)
@@ -231,6 +235,244 @@ def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
         x = jnp.where(keep, x, x_in)
         p = jnp.where(keep, p, p_in)
     return x, p, trk_to_det, matched_det
+
+
+# ------------------------------------------------------------------------
+# Chunk-resident execution (DESIGN.md §9): the whole serving step — masked
+# lane re-init, fused frame, tracker lifecycle, emit — as kernel-safe
+# lane-layout vector algebra, so the megakernel (`kernels.chunk.fused_chunk`)
+# can unroll it once per frame of its in-kernel frame loop and stay
+# bit-identical to F per-frame dispatches of `core.sort`'s scan.
+# ------------------------------------------------------------------------
+class ChunkState(NamedTuple):
+    """Per-lane SORT state as a flat bundle of numeric arrays — the carried
+    state of the chunk-resident megakernel (DESIGN.md §9).
+
+    ``core.sort.LaneSortState`` nests a bool-typed ``SlotPool`` and mixes
+    per-stream scalars; a Pallas kernel wants one flat tuple of >=2-D
+    numeric operands with a uniform lane axis.  Every lifecycle field is
+    int32 (``alive`` included: 0/1), per-stream counters carry a leading
+    unit sublane axis: ``x [7, T, S]``, ``p [49, T, S]``, slot fields
+    ``[T, S]``, ``next_uid``/``frame_count`` ``[1, S]``.
+    ``core.sort.chunk_state_of`` / ``lane_state_of_chunk`` convert exactly.
+    """
+
+    x: jnp.ndarray                  # [7, T, S]  Kalman means
+    p: jnp.ndarray                  # [49, T, S] covariances
+    alive: jnp.ndarray              # [T, S] int32 0/1
+    age: jnp.ndarray                # [T, S] int32
+    hits: jnp.ndarray               # [T, S] int32
+    hit_streak: jnp.ndarray         # [T, S] int32
+    time_since_update: jnp.ndarray  # [T, S] int32
+    uid: jnp.ndarray                # [T, S] int32, -1 when dead
+    next_uid: jnp.ndarray           # [1, S] int32
+    frame_count: jnp.ndarray        # [1, S] int32
+
+
+class ChunkOuts(NamedTuple):
+    """Per-frame outputs of the chunk body; stacked ``[F, ...]`` by
+    :func:`chunk_lane` / the megakernel's frame-indexed output blocks."""
+
+    boxes: jnp.ndarray        # [T, 4, S]
+    uid: jnp.ndarray          # [T, S] int32
+    emit: jnp.ndarray         # [T, S] bool (int32 across the kernel ABI)
+    trk_to_det: jnp.ndarray   # [T, S] int32
+    matched_det: jnp.ndarray  # [D, S] bool (int32 across the kernel ABI)
+
+
+def assign_slots_lane_unrolled(free_mask: jnp.ndarray,
+                               want_mask: jnp.ndarray) -> jnp.ndarray:
+    """Kernel-safe ``slots.assign_slots_lane``: the same rank matching
+    (the k-th claimant takes the k-th free slot, -1 when the pool is
+    exhausted) computed with trace-time-unrolled compare/accumulate
+    instead of cumsum + scatter + ``take_along_axis``, which don't lower
+    inside a Pallas TPU kernel body.  ``free [T, ...]`` bool,
+    ``want [D, ...]`` bool -> ``slot_for [D, ...] int32``; integer-exact
+    vs the scatter version (``tests/test_lane.py`` locks the equivalence).
+    """
+    t, d = free_mask.shape[0], want_mask.shape[0]
+    zero = jnp.zeros(free_mask.shape[1:], jnp.int32)
+    free_rank = []                    # free slots with index < ti
+    num_free = zero
+    for ti in range(t):
+        free_rank.append(num_free)
+        num_free = num_free + free_mask[ti].astype(jnp.int32)
+    want_rank = []                    # claimants with index < di
+    acc = zero
+    for di in range(d):
+        want_rank.append(acc)
+        acc = acc + want_mask[di].astype(jnp.int32)
+    rows = []
+    for di in range(d):
+        ok = want_mask[di] & (want_rank[di] < num_free)
+        slot = jnp.full(free_mask.shape[1:], -1, jnp.int32)
+        for ti in range(t):
+            hit = free_mask[ti] & (free_rank[ti] == want_rank[di])
+            slot = jnp.where(ok & hit, ti, slot)
+        rows.append(slot)
+    return jnp.stack(rows, axis=0)
+
+
+def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
+                    det_mask: jnp.ndarray, active: jnp.ndarray,
+                    reset: jnp.ndarray,
+                    trk_to_det: Optional[jnp.ndarray] = None, *,
+                    iou_threshold: float = 0.3, max_age: int = 1,
+                    min_hits: int = 3, assoc: str = "greedy"):
+    """One serving step of the chunk-resident body (DESIGN.md §9).
+
+    Replicates, op for op, what the serving scan runs per frame —
+    ``core.sort.reset_ragged`` followed by ``SortEngine.lane_step``
+    (masked lane re-init, fused predict/IoU/assign/update, tick, births,
+    inactive-lane freeze, emit) — restricted to operations that lower
+    inside a Pallas TPU kernel body, so the megakernel that runs this
+    once per frame of its in-kernel loop is bit-identical to F per-frame
+    dispatches.
+
+    ``det [D, 4, S]`` xyxy, ``det_mask [D, S]`` 0/1 in state dtype,
+    ``active [1, S]`` 0/1 in state dtype, ``reset [1, S]`` 0/1 numeric;
+    ``trk_to_det [T, S] int32`` (optional) is the precomputed association
+    for the fused-Hungarian path (see :func:`frame_lane`).
+    Returns ``(ChunkState, ChunkOuts)``.
+    """
+    from repro.core import kalman, slots
+
+    dt = state.x.dtype
+    t = state.alive.shape[0]
+    d = det.shape[0]
+    act = active[0] > 0                                      # [S]
+    rst = reset[0] > 0                                       # [S]
+
+    # masked lane re-init (reset_lanes semantics, uid_start=1): a recycled
+    # lane and its admitted sequence's first frame share the step.  The
+    # initial covariance enters as 49 scalar selects, not a [49] array —
+    # Pallas kernel bodies may not capture non-scalar constants, and the
+    # scalar path is bit-identical (every entry is exactly representable).
+    p0 = tuple(float(v) for v in
+               kalman.initial_covariance_np().astype(dt).reshape(49))
+    x = jnp.where(rst[None, None], jnp.zeros((), dt), state.x)
+    p = jnp.stack([jnp.where(rst[None], v, state.p[i])
+                   for i, v in enumerate(p0)], axis=0)
+    zero = jnp.zeros((), jnp.int32)
+    alive0 = (state.alive > 0) & ~rst[None]
+    pool0 = slots.SlotPool(
+        alive=alive0,
+        age=jnp.where(rst[None], zero, state.age),
+        hits=jnp.where(rst[None], zero, state.hits),
+        hit_streak=jnp.where(rst[None], zero, state.hit_streak),
+        time_since_update=jnp.where(rst[None], zero,
+                                    state.time_since_update),
+        uid=jnp.where(rst[None], -1, state.uid),
+        next_uid=jnp.where(rst, 1, state.next_uid[0]),       # [S]
+    )
+    fc0 = jnp.where(rst, zero, state.frame_count[0])         # [S]
+
+    # 1-3. fused predict + IoU + assign + masked update — the same body
+    # the per-frame kernel runs (inactive lanes restored inside)
+    x, p, t2d, matched = frame_lane(
+        x, p, det, det_mask, alive0.astype(dt), iou_threshold,
+        active=active, assoc=assoc, trk_to_det=trk_to_det)
+
+    # 4a. age & kill (elementwise)
+    pool = slots.tick(pool0, t2d >= 0, max_age)
+
+    # 4b. births from unmatched detections into free slots (kernel-safe
+    # rank matching + unrolled one-hot scatter over the T x D grid)
+    unmatched = (det_mask > 0) & ~matched & act[None]
+    slot_for = assign_slots_lane_unrolled(~pool.alive, unmatched)
+    z_det = xyxy_to_z_lane(det)                              # [4, D, S]
+    claimed = slot_for >= 0
+    born_order = []                                          # claimants < di
+    n_born = jnp.zeros(slot_for.shape[1:], jnp.int32)
+    for di in range(d):
+        born_order.append(n_born)
+        n_born = n_born + claimed[di].astype(jnp.int32)
+    born_rows, uid_rows, zb_rows = [], [], []
+    for ti in range(t):
+        sel_any = jnp.zeros(slot_for.shape[1:], bool)
+        uid_t = pool.uid[ti]
+        zb_t = jnp.zeros((4,) + slot_for.shape[1:], dt)
+        for di in range(d):
+            sel = slot_for[di] == ti      # claimed slots are distinct
+            sel_any = sel_any | sel
+            uid_t = jnp.where(sel, pool.next_uid + born_order[di], uid_t)
+            zb_t = jnp.where(sel[None], z_det[:, di], zb_t)
+        born_rows.append(sel_any)
+        uid_rows.append(uid_t)
+        zb_rows.append(zb_t)
+    born = jnp.stack(born_rows, axis=0)                      # [T, S]
+    zb = jnp.stack(zb_rows, axis=1)                          # [4, T, S]
+    pool = slots.SlotPool(
+        alive=pool.alive | born,
+        age=jnp.where(born, zero, pool.age),
+        hits=jnp.where(born, zero, pool.hits),
+        hit_streak=jnp.where(born, zero, pool.hit_streak),
+        time_since_update=jnp.where(born, zero, pool.time_since_update),
+        uid=jnp.stack(uid_rows, axis=0),
+        next_uid=pool.next_uid + n_born,
+    )
+    x_init = jnp.concatenate([zb, jnp.zeros((3,) + zb.shape[1:], dt)], 0)
+    x = jnp.where(born[None], x_init, x)
+    p = jnp.stack([jnp.where(born, v, p[i]) for i, v in enumerate(p0)],
+                  axis=0)
+
+    # inactive lanes: lifecycle freezes (x/p were restored inside
+    # frame_lane; births can't fire — `unmatched` was gated by act)
+    def sel(new, old):
+        return jnp.where(act[None], new, old)
+
+    pool = slots.SlotPool(
+        alive=sel(pool.alive, pool0.alive),
+        age=sel(pool.age, pool0.age),
+        hits=sel(pool.hits, pool0.hits),
+        hit_streak=sel(pool.hit_streak, pool0.hit_streak),
+        time_since_update=sel(pool.time_since_update,
+                              pool0.time_since_update),
+        uid=sel(pool.uid, pool0.uid),
+        next_uid=jnp.where(act, pool.next_uid, pool0.next_uid),
+    )
+    fc = fc0 + act.astype(jnp.int32)                         # [S]
+
+    # 5. emit: updated this frame AND (probation passed OR warmup)
+    warmup = (fc <= min_hits)[None]                          # [1, S]
+    emit = (pool.alive & (pool.time_since_update < 1)
+            & ((pool.hit_streak >= min_hits) | warmup) & act[None])
+    new_state = ChunkState(
+        x=x, p=p, alive=pool.alive.astype(jnp.int32), age=pool.age,
+        hits=pool.hits, hit_streak=pool.hit_streak,
+        time_since_update=pool.time_since_update, uid=pool.uid,
+        next_uid=pool.next_uid[None, :], frame_count=fc[None, :])
+    outs = ChunkOuts(boxes=z_to_xyxy_lane(x[:4]), uid=pool.uid, emit=emit,
+                     trk_to_det=t2d, matched_det=matched)
+    return new_state, outs
+
+
+def chunk_lane(state: ChunkState, det: jnp.ndarray, det_mask: jnp.ndarray,
+               active: jnp.ndarray, reset: jnp.ndarray,
+               trk_to_det: Optional[jnp.ndarray] = None, *,
+               iou_threshold: float = 0.3, max_age: int = 1,
+               min_hits: int = 3, assoc: str = "greedy"):
+    """Chunk-level oracle: scan :func:`step_chunk_lane` over the frame
+    axis — the ground truth for ``kernels.chunk.fused_chunk`` and the
+    non-TPU execution path of ``kernels.ops.chunk_step``.
+
+    ``det [F, D, 4, S]``, ``det_mask [F, D, S]``, ``active``/``reset``
+    ``[F, 1, S]``, optional ``trk_to_det [F, T, S] int32``.  Returns
+    ``(ChunkState, ChunkOuts stacked over F)``.
+    """
+    def body(st, inp):
+        t2 = None
+        if trk_to_det is None:
+            d_, m_, a_, r_ = inp
+        else:
+            d_, m_, a_, r_, t2 = inp
+        return step_chunk_lane(st, d_, m_, a_, r_, t2,
+                               iou_threshold=iou_threshold, max_age=max_age,
+                               min_hits=min_hits, assoc=assoc)
+
+    xs = ((det, det_mask, active, reset) if trk_to_det is None
+          else (det, det_mask, active, reset, trk_to_det))
+    return jax.lax.scan(body, state, xs)
 
 
 def iou_lane(det: jnp.ndarray, trk: jnp.ndarray) -> jnp.ndarray:

@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import slots, sort as sort_mod
+from repro.core import slots
 from repro.core.sort import SortEngine
 from repro.data.stream import ReorderBuffer, SequenceTracks
 
@@ -211,12 +211,14 @@ class StreamScheduler:
 
         def chunk_fn(state, det, dm, active, reset):
             self.trace_log.append(det.shape[1])    # runs at trace time only
-            def body(st, inp):
-                d, m, a, r = inp
-                # recycle + admitted sequence's first frame: same fused step
-                st = sort_mod.reset_ragged(st, r)
-                return self.engine.step_ragged(st, d, m, a)
-            return jax.lax.scan(body, state, (det, dm, active, reset))
+            # F serving steps in one call: a per-frame jitted scan, or —
+            # with SortConfig.chunk_kernel — ONE chunk-resident pallas_call
+            # (DESIGN.md §9).  Everything above this line (planning,
+            # accounting, trace_log, the elastic ladder, sharding) is
+            # identical under both dispatch modes: the granularity change
+            # lives entirely inside the engine call.
+            return self.engine.run_chunk_ragged(state, det, dm, active,
+                                                reset)
 
         if mesh is None:
             self._sharding = None

@@ -15,7 +15,10 @@ cross-device collectives**: ``shard_map`` (via :mod:`repro.compat`)
 partitions the state and chunk operands, every device scans its shard
 locally, and a sharded run is *bit-identical* to the single-device run
 (``tests/test_device_sharding.py`` locks this down for both engine paths
-and both association modes).
+and both association modes).  The chunk-resident megakernel (DESIGN.md
+§9) composes unchanged: ``run_chunk_ragged`` replaces the per-frame scan
+inside the ``shard_map`` body with one chunk dispatch per device, still
+collective-free (same HLO grep lock, ``chunk_kernel=True`` case).
 
 Sharding layouts (the lane axis must be a contiguous array dimension for
 ``NamedSharding`` to place each device's shard without copies):

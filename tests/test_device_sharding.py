@@ -45,9 +45,10 @@ def _scene(seed, frames):
             np.pad(dm, ((0, 0), (0, MAX_DETS - d))))
 
 
-def _engine(use_kernels, assoc="hungarian"):
+def _engine(use_kernels, assoc="hungarian", chunk_kernel=False):
     return SortEngine(SortConfig(max_trackers=8, max_detections=MAX_DETS,
-                                 use_kernels=use_kernels, assoc=assoc))
+                                 use_kernels=use_kernels, assoc=assoc,
+                                 chunk_kernel=chunk_kernel))
 
 
 def _serve(eng, seqs, mesh, num_lanes=4, chunk=4):
@@ -103,6 +104,31 @@ def test_sharded_drain_and_zero_frame_sequences():
     assert sched.chunks_run == 0 and not sched.busy
 
 
+# ----------------------------------------------- chunk-resident megakernel
+@needs_multi
+@pytest.mark.parametrize("assoc", ["hungarian", "greedy"])
+def test_sharded_megakernel_bit_identical_to_single_device(assoc):
+    """The chunk-resident dispatch mode (DESIGN.md §9) composes with the
+    lane mesh: the same ragged mix served by the megakernel over 4
+    devices equals the unsharded per-frame-scan run bit for bit."""
+    seqs = [(f"k{i}", *_scene(20 + i, f)) for i, f in enumerate(LENGTHS)]
+    _, solo = _serve(_engine(True, assoc), seqs, mesh=None)
+    _, shard = _serve(_engine(True, assoc, chunk_kernel=True), seqs,
+                      mesh=lane_mesh(4))
+    _assert_results_equal(solo, shard)
+
+
+@pytest.mark.parametrize("assoc", ["hungarian", "greedy"])
+def test_megakernel_mesh_of_one_matches_unsharded(assoc):
+    """Mesh-of-one megakernel (shard_map wrapping the chunk dispatch) is
+    the identity — runs in any session."""
+    seqs = [(f"ko{i}", *_scene(30 + i, f)) for i, f in enumerate([6, 3, 8])]
+    _, solo = _serve(_engine(True, assoc), seqs, mesh=None, num_lanes=2)
+    _, shard = _serve(_engine(True, assoc, chunk_kernel=True), seqs,
+                      mesh=lane_mesh(1), num_lanes=2)
+    _assert_results_equal(solo, shard)
+
+
 # ---------------------------------------------------------- mesh plumbing
 @needs_multi
 def test_lane_budget_must_divide_shard_count():
@@ -142,15 +168,16 @@ def test_state_stays_lane_sharded_across_chunks():
 
 
 @needs_multi
-@pytest.mark.parametrize("use_kernels", [False, True])
-def test_sharded_chunk_program_has_no_collectives(use_kernels):
+@pytest.mark.parametrize("use_kernels,chunk_kernel",
+                         [(False, False), (True, False), (True, True)])
+def test_sharded_chunk_program_has_no_collectives(use_kernels, chunk_kernel):
     """Sequences are independent, so the sharded chunk must lower to N
     disjoint per-device scans: no collective op of any kind may appear in
     the lowered program (the zero-collectives claim, checked not asserted
-    from prose)."""
+    from prose) — including the megakernel dispatch mode."""
     c, lanes, d = 3, 4, MAX_DETS
-    sched = StreamScheduler(_engine(use_kernels), num_lanes=lanes, chunk=c,
-                            mesh=lane_mesh(4))
+    sched = StreamScheduler(_engine(use_kernels, chunk_kernel=chunk_kernel),
+                            num_lanes=lanes, chunk=c, mesh=lane_mesh(4))
     det = np.zeros((c, lanes, d, 4), np.float32)
     dm = np.zeros((c, lanes, d), bool)
     active = np.ones((c, lanes), bool)

@@ -329,3 +329,104 @@ def test_use_kernels_single_step_matches_run():
 def test_use_kernels_rejects_per_phase_injections():
     with pytest.raises(ValueError):
         SortEngine(SortConfig(use_kernels=True), iou_fn=lambda a, b: a)
+
+
+# ------------------------------------------------ chunk megakernel pieces
+def test_assign_slots_lane_unrolled_matches_scatter_version():
+    """The kernel-safe unrolled rank matcher == slots.assign_slots_lane
+    (cumsum + scatter) for random free/want masks, including pool
+    exhaustion (more claimants than free slots)."""
+    rng = np.random.default_rng(11)
+    for t, d in [(4, 3), (6, 5), (3, 6), (8, 8)]:
+        for _ in range(6):
+            free = jnp.asarray(rng.random((t, 9)) < 0.5)
+            want = jnp.asarray(rng.random((d, 9)) < 0.6)
+            got = ref.assign_slots_lane_unrolled(free, want)
+            want_out = slots.assign_slots_lane(free, want)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want_out))
+
+
+def _chunk_operands(seed, f, t, d, s, dt=np.float32):
+    """A fresh ChunkState plus a planned chunk with partial masks,
+    mid-chunk inactivity, and interior resets."""
+    from repro.core import kalman
+
+    rng = np.random.default_rng(seed)
+    p0 = kalman.initial_covariance_np().reshape(49).astype(dt)
+    state = ref.ChunkState(
+        x=jnp.zeros((7, t, s), dt),
+        p=jnp.asarray(np.broadcast_to(p0[:, None, None],
+                                      (49, t, s)).copy()),
+        alive=jnp.zeros((t, s), jnp.int32),
+        age=jnp.zeros((t, s), jnp.int32),
+        hits=jnp.zeros((t, s), jnp.int32),
+        hit_streak=jnp.zeros((t, s), jnp.int32),
+        time_since_update=jnp.zeros((t, s), jnp.int32),
+        uid=jnp.full((t, s), -1, jnp.int32),
+        next_uid=jnp.ones((1, s), jnp.int32),
+        frame_count=jnp.zeros((1, s), jnp.int32),
+    )
+    xy = rng.uniform(0, 200, size=(f, d, 2, s))
+    wh = rng.uniform(5, 60, size=(f, d, 2, s))
+    det = jnp.asarray(np.concatenate([xy, xy + wh], 2).astype(dt))
+    dm = jnp.asarray((rng.random((f, d, s)) < 0.75).astype(dt))
+    active = jnp.asarray((rng.random((f, 1, s)) < 0.85).astype(dt))
+    reset = np.zeros((f, 1, s), np.int32)
+    reset[0] = 1
+    reset |= (rng.random((f, 1, s)) < 0.1).astype(np.int32)
+    return state, det, dm, active, jnp.asarray(reset)
+
+
+@pytest.mark.parametrize("assoc", ["greedy", "hungarian"])
+def test_fused_chunk_kernel_matches_chunk_oracle(assoc):
+    """The chunk-resident megakernel (interpret mode) == ref.chunk_lane,
+    bit for bit, over a full lifecycle chunk: state leaves and all five
+    per-frame outputs (DESIGN.md §9)."""
+    from repro.kernels import chunk
+
+    f, t, d, s = 5, 4, 3, 8
+    state, det, dm, active, reset = _chunk_operands(29, f, t, d, s)
+    t2d = None
+    if assoc == "hungarian":
+        _, pre = ref.chunk_lane(state, det, dm, active, reset,
+                                assoc="hungarian")
+        t2d = pre.trk_to_det
+    want_st, want = ref.chunk_lane(state, det, dm, active, reset, t2d,
+                                   assoc=assoc)
+    got_st, got = chunk.fused_chunk(state, det, dm, active, reset, t2d,
+                                    assoc=assoc, block_s=4, interpret=True)
+    for name, a, b in zip(ref.ChunkState._fields, got_st, want_st):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"state.{name} ({assoc})")
+    np.testing.assert_array_equal(np.asarray(got.boxes),
+                                  np.asarray(want.boxes))
+    np.testing.assert_array_equal(np.asarray(got.uid),
+                                  np.asarray(want.uid))
+    np.testing.assert_array_equal(np.asarray(got.emit) > 0,
+                                  np.asarray(want.emit))
+    np.testing.assert_array_equal(np.asarray(got.trk_to_det),
+                                  np.asarray(want.trk_to_det))
+    np.testing.assert_array_equal(np.asarray(got.matched_det) > 0,
+                                  np.asarray(want.matched_det))
+
+
+def test_chunk_step_interpret_matches_ref_mode():
+    """ops.chunk_step wiring: mode="interpret" (megakernel + Hungarian
+    pre-pass plumbing) == mode="ref" for both associations."""
+    f, t, d, s = 4, 4, 3, 8
+    state, det, dm, active, reset = _chunk_operands(31, f, t, d, s)
+    for assoc in ("greedy", "hungarian"):
+        want_st, want = ops.chunk_step(state, det, dm, active, reset,
+                                       mode="ref", assoc=assoc, block_s=4)
+        got_st, got = ops.chunk_step(state, det, dm, active, reset,
+                                     mode="interpret", assoc=assoc,
+                                     block_s=4)
+        for a, b in zip(jax.tree_util.tree_leaves(got_st),
+                        jax.tree_util.tree_leaves(want_st)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=assoc)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=assoc)

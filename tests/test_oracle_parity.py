@@ -82,6 +82,103 @@ def test_oracle_parity_deterministic(use_kernels, assoc, seed, max_objects):
                               f"(uk={use_kernels} assoc={assoc} seed={seed})")
 
 
+# ------------------------------------------------- chunk-resident megakernel
+# DESIGN.md §9: the megakernel runs a whole planned chunk inside one
+# pallas_call; off-TPU `mode="auto"` resolves both dispatch modes to the
+# same-math oracle, so parity here is *bitwise* (the per-frame scan body
+# and the in-kernel chunk body are the identical elementwise op chain).
+
+_CHUNK_LANES = 3
+_CHUNK_DETS = 5
+
+
+def _chunk_engines(assoc):
+    key = ("chunk", assoc)
+    if key not in _ENGINES:
+        def mk(chunk_kernel):
+            return SortEngine(SortConfig(
+                max_trackers=8, max_detections=_CHUNK_DETS,
+                use_kernels=True, assoc=assoc, chunk_kernel=chunk_kernel))
+        _ENGINES[key] = (mk(False), mk(True))
+    return _ENGINES[key]
+
+
+def _chunk_traffic(seed, num_frames, lanes=_CHUNK_LANES, d=_CHUNK_DETS):
+    """A planned serving chunk with adversarial lifecycle traffic: partial
+    detection masks, lanes going inactive mid-chunk, and interior resets
+    (mid-chunk lane recycles) on top of the admission reset at frame 0."""
+    rng = np.random.default_rng(seed)
+    tl = rng.uniform(0.0, 180.0, size=(num_frames, lanes, d, 2))
+    wh = rng.uniform(8.0, 40.0, size=(num_frames, lanes, d, 2))
+    det = np.concatenate([tl, tl + wh], axis=-1).astype(np.float32)
+    dm = rng.random((num_frames, lanes, d)) < 0.7
+    active = rng.random((num_frames, lanes)) < 0.85
+    reset = rng.random((num_frames, lanes)) < 0.15
+    reset[0] = True
+    return tuple(jnp.asarray(a) for a in (det, dm, active, reset))
+
+
+def _assert_chunk_equal(a, b, ctx=""):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), ctx
+    for i, (xa, xb) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb),
+                                      err_msg=f"leaf {i} {ctx}")
+
+
+@pytest.mark.parametrize("assoc", ["greedy", "hungarian"])
+def test_megakernel_chunk_bit_identical_to_per_frame_scan(assoc):
+    """Two sequential chunks (state carried across the boundary) through
+    the per-frame-scan dispatch mode and the megakernel dispatch mode:
+    every state leaf and every output is bit-identical."""
+    eng_scan, eng_mega = _chunk_engines(assoc)
+    st_a = eng_scan.init_ragged(_CHUNK_LANES)
+    st_b = eng_mega.init_ragged(_CHUNK_LANES)
+    for chunk_idx in range(2):
+        det, dm, active, reset = _chunk_traffic(100 + chunk_idx, 9)
+        st_a, out_a = eng_scan.run_chunk_ragged(st_a, det, dm, active, reset)
+        st_b, out_b = eng_mega.run_chunk_ragged(st_b, det, dm, active, reset)
+        ctx = f"(assoc={assoc} chunk={chunk_idx})"
+        _assert_chunk_equal(st_a, st_b, ctx)
+        _assert_chunk_equal(out_a, out_b, ctx)
+
+
+def test_all_inactive_chunk_is_bitwise_noop():
+    """A chunk whose lanes are all inactive must leave the lane state
+    bit-identical and emit nothing — the scheduler relies on idle drain
+    tails being free of side effects under both dispatch modes."""
+    _, eng = _chunk_engines("greedy")
+    st = eng.init_ragged(_CHUNK_LANES)
+    det, dm, active, reset = _chunk_traffic(7, 6)
+    st, _ = eng.run_chunk_ragged(st, det, dm, active, reset)  # warm state
+    det2, dm2, _, _ = _chunk_traffic(8, 6)
+    idle = jnp.zeros((6, _CHUNK_LANES), bool)
+    st2, out = eng.run_chunk_ragged(st, det2, dm2, idle, idle)
+    _assert_chunk_equal(st, st2, "(all-inactive chunk)")
+    assert not np.asarray(out.emit).any()
+
+
+@pytest.mark.parametrize("assoc", ["greedy", "hungarian"])
+def test_megakernel_ragged_tail_chunk(assoc):
+    """A tail chunk where lanes run out of frames at different steps
+    (ragged drain) stays bit-identical across dispatch modes."""
+    eng_scan, eng_mega = _chunk_engines(assoc)
+    det, dm, _, _ = _chunk_traffic(42, 7)
+    # lane l active for its first (7 - 2*l) steps only — ragged tail
+    active = np.zeros((7, _CHUNK_LANES), bool)
+    for lane in range(_CHUNK_LANES):
+        active[:7 - 2 * lane, lane] = True
+    reset = np.zeros((7, _CHUNK_LANES), bool)
+    reset[0] = True
+    active, reset = jnp.asarray(active), jnp.asarray(reset)
+    st_a, out_a = eng_scan.run_chunk_ragged(
+        eng_scan.init_ragged(_CHUNK_LANES), det, dm, active, reset)
+    st_b, out_b = eng_mega.run_chunk_ragged(
+        eng_mega.init_ragged(_CHUNK_LANES), det, dm, active, reset)
+    _assert_chunk_equal(st_a, st_b, f"(ragged tail, assoc={assoc})")
+    _assert_chunk_equal(out_a, out_b, f"(ragged tail, assoc={assoc})")
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("use_kernels,assoc", PATHS)
 @settings(max_examples=8, deadline=None, derandomize=True)

@@ -30,9 +30,10 @@ def _scene(seed, frames):
             np.pad(dm, ((0, 0), (0, MAX_DETS - d))))
 
 
-def _engine(use_kernels):
+def _engine(use_kernels, chunk_kernel=False):
     return SortEngine(SortConfig(max_trackers=8, max_detections=MAX_DETS,
-                                 use_kernels=use_kernels))
+                                 use_kernels=use_kernels,
+                                 chunk_kernel=chunk_kernel))
 
 
 def _solo_run(eng, db, dm):
@@ -281,6 +282,41 @@ def test_recycled_lane_never_reuses_a_live_uid(use_kernels):
     assert int(pool.next_uid[0]) == 1        # fresh namespace
     np.testing.assert_array_equal(uid[1], uid_before[1])   # lane 1 intact
     assert int(pool.next_uid[1]) == int(pool_before.next_uid[1])
+
+
+# ------------------------------------------- chunk-kernel dispatch mode
+def test_chunk_kernel_results_and_accounting_match_per_frame_mode():
+    """The megakernel dispatch mode (DESIGN.md §9) is invisible to the
+    scheduler: same traffic through chunk_kernel=True and =False yields
+    bit-identical tracks AND an identical accounting tuple (frames,
+    lane-steps, chunks, utilization, admission schedule).  The mix forces
+    a ragged tail chunk (lengths not divisible by chunk=7) and mid-chunk
+    lane recycles."""
+    lengths = [12, 5, 9, 3]
+    seqs = [(f"ck{i}", *_scene(40 + i, f)) for i, f in enumerate(lengths)]
+    accounting = {}
+    results = {}
+    for chunk_kernel in (False, True):
+        sched = StreamScheduler(_engine(True, chunk_kernel=chunk_kernel),
+                                num_lanes=2, chunk=7)
+        for name, db, dm in seqs:
+            sched.submit(name, db, dm)
+        results[chunk_kernel] = sched.run()
+        accounting[chunk_kernel] = (sched.frames_processed,
+                                    sched.lane_steps, sched.chunks_run,
+                                    sched.utilization,
+                                    list(sched.admissions))
+    assert accounting[False] == accounting[True]
+    for ra, rb in zip(results[False], results[True]):
+        assert ra.name == rb.name
+        np.testing.assert_array_equal(ra.uid, rb.uid, err_msg=ra.name)
+        np.testing.assert_array_equal(ra.emit, rb.emit, err_msg=ra.name)
+        np.testing.assert_array_equal(ra.boxes, rb.boxes, err_msg=ra.name)
+    # and both modes stay bit-identical to per-sequence solo runs
+    eng = _engine(True)
+    for (name, db, dm), tracks in zip(seqs, results[True]):
+        _assert_tracks_equal_solo(tracks, _solo_run(eng, db, dm),
+                                  f"{name} (megakernel)")
 
 
 # --------------------------------------------------- utilization accounting
