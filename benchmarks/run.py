@@ -24,7 +24,7 @@ import traceback
 def main(argv=None) -> None:
     from benchmarks import (association_ablation, autoscale, datasets,
                             device_scaling, dispatch_overhead, kernel_ai,
-                            ragged, scaling, speedup)
+                            multiclass, ragged, scaling, speedup)
 
     ap = argparse.ArgumentParser(
         prog="benchmarks.run",
@@ -53,6 +53,9 @@ def main(argv=None) -> None:
         # per-frame scan vs chunk-resident megakernel dispatch accounting
         # (DESIGN.md §9)
         ("dispatch", dispatch_overhead.run, True),
+        # composed costs x class partition vs the single-class IoU
+        # baseline — one block-diagonal lane-batched solve (DESIGN.md §10)
+        ("multiclass", multiclass.run, True),
     ]
     print("name,us_per_call,derived")
     failed = 0

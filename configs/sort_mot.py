@@ -16,6 +16,12 @@ detections to 16.  Pick by execution strategy:
   above (tests/test_oracle_parity.py, tests/test_scheduler.py).
 * ``MEGAKERNEL_GREEDY`` — megakernel with in-kernel greedy association
   (no host-side Hungarian pre-pass feeding the kernel; DESIGN.md §6).
+* ``MULTICLASS``  — megakernel with the class-partitioned composed cost
+  (DESIGN.md §10): 3-way class partition plus an appearance-embedding
+  term, solved block-diagonally in the same single lane-batched
+  assignment (cross-class pairs are masked infeasible — no per-class
+  loop, no extra dispatches).  Steps take ``det_class``/``det_embed``
+  operands (``SortEngine.step(..., det_class=, det_embed=)``).
 
 Usage::
 
@@ -24,7 +30,7 @@ Usage::
     from repro.core import SortEngine
     engine = SortEngine(MEGAKERNEL)
 """
-from repro.core import SortConfig
+from repro.core import SortConfig, cost
 
 BASELINE = SortConfig(max_trackers=16, max_detections=16,
                       use_kernels=False)
@@ -39,9 +45,15 @@ MEGAKERNEL_GREEDY = SortConfig(max_trackers=16, max_detections=16,
                                use_kernels=True, chunk_kernel=True,
                                assoc="greedy")
 
+MULTICLASS = SortConfig(max_trackers=16, max_detections=16,
+                        use_kernels=True, chunk_kernel=True,
+                        cost=cost.iou_embed(embed_dim=8),
+                        num_classes=3)
+
 PRESETS = {
     "baseline": BASELINE,
     "fused": FUSED,
     "megakernel": MEGAKERNEL,
     "megakernel-greedy": MEGAKERNEL_GREEDY,
+    "multiclass": MULTICLASS,
 }

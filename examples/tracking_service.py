@@ -19,25 +19,51 @@ import argparse
 import os
 import time
 
-from repro.core import SortConfig, SortEngine
-from repro.data import mot, stream
-from repro.data.synthetic import SceneConfig, generate_scene
+import numpy as np
+
+from repro.core import SortConfig, SortEngine, cost as cost_mod
+from repro.data import mot
+from repro.data.synthetic import (SceneConfig, generate_multiclass_scene,
+                                  generate_scene)
 from repro.serve import StreamScheduler
 from repro.sharding import lane_mesh
 
 
-def load_or_synthesize(det_dir):
+def load_or_synthesize(det_dir, num_classes=1, embed_dim=0):
+    """``[(name, det_boxes, det_mask, det_class|None, det_embed|None)]``.
+
+    Multi-class / embed configs read the class column from real det files
+    (clamped into ``[0, num_classes)``; MOT15 files carry ``-1`` = no
+    class) and code up identity embeddings from it; synthetic sequences
+    come from the multi-class generator directly.
+    """
+    multi = num_classes > 1 or embed_dim > 0
     seqs = []
     if det_dir and os.path.isdir(det_dir):
         for name in sorted(os.listdir(det_dir)):
-            if name.endswith(".txt"):
-                db, dm = mot.read_det_file(os.path.join(det_dir, name))
-                seqs.append((name[:-4], db, dm))
+            if not name.endswith(".txt"):
+                continue
+            db, dm, dc, _ = mot.read_det_file(
+                os.path.join(det_dir, name), with_extras=True)
+            dc = np.clip(dc, 0, max(num_classes - 1, 0)).astype(np.int32)
+            de = None
+            if embed_dim > 0:
+                de = np.eye(embed_dim, dtype=np.float32)[dc % embed_dim]
+            seqs.append((name[:-4], db, dm,
+                         dc if num_classes > 1 else None, de))
     if not seqs:  # synthesize the 11 paper sequences
         for i, (name, (frames, max_obj)) in enumerate(mot.TABLE_I.items()):
-            _, _, db, dm = generate_scene(
-                SceneConfig(num_frames=frames, max_objects=max_obj, seed=i))
-            seqs.append((name, db, dm))
+            cfg = SceneConfig(num_frames=frames, max_objects=max_obj, seed=i)
+            if multi:
+                _, _, _, db, dm, dc, de = generate_multiclass_scene(
+                    cfg, num_classes=max(num_classes, 1),
+                    embed_dim=max(embed_dim, 1))
+                seqs.append((name, db, dm,
+                             dc if num_classes > 1 else None,
+                             de if embed_dim > 0 else None))
+            else:
+                _, _, db, dm = generate_scene(cfg)
+                seqs.append((name, db, dm, None, None))
     return seqs
 
 
@@ -89,21 +115,43 @@ def main():
                          "(on the fused path its JV solve runs as a "
                          "jitted lane-batched stage); 'greedy' is the "
                          "cheaper in-kernel best-first matcher")
+    ap.add_argument("--cost", choices=("iou", "iou+maha", "iou+embed"),
+                    default="iou",
+                    help="association cost (DESIGN.md §10): pure IoU "
+                         "(the paper's, default), IoU with a chi-square "
+                         "Mahalanobis gate, or IoU composed with an "
+                         "appearance-embedding dot product")
+    ap.add_argument("--classes", type=int, default=1,
+                    help="class-partitioned association (DESIGN.md §10): "
+                         "cross-class det/track pairs are masked "
+                         "infeasible, so the single lane-batched "
+                         "assignment solves the per-class block-diagonal "
+                         "problem — no per-class loop, no extra "
+                         "dispatches; 1 = single-class (default)")
+    ap.add_argument("--embed-dim", type=int, default=8,
+                    help="appearance embedding width for --cost iou+embed")
     args = ap.parse_args()
     if args.min_lanes is not None and not args.autoscale:
         ap.error("--min-lanes only applies with --autoscale "
                  "(a fixed budget is just --lanes)")
 
-    seqs = load_or_synthesize(args.det_dir)
+    spec = cost_mod.parse_cost(args.cost, embed_dim=args.embed_dim)
+    seqs = load_or_synthesize(args.det_dir, num_classes=args.classes,
+                              embed_dim=spec.embed_dim)
     if args.replicate > 1:
-        seqs = stream.replicate(seqs, args.replicate)
+        reps = []
+        for r in range(args.replicate):
+            reps += [(f"{name}#{r}",) + rest
+                     for name, *rest in (tuple(s) for s in seqs)]
+        seqs = reps
     os.makedirs(args.out, exist_ok=True)
 
-    d = max(db.shape[1] for _, db, _ in seqs)
+    d = max(db.shape[1] for _, db, *_ in seqs)
     eng = SortEngine(SortConfig(max_trackers=16, max_detections=d,
                                 use_kernels=args.fused or args.chunk_kernel,
                                 chunk_kernel=args.chunk_kernel,
-                                assoc=args.assoc))
+                                assoc=args.assoc, cost=spec,
+                                num_classes=args.classes))
     mesh = lane_mesh(args.devices) if args.devices > 1 else None
     min_lanes = max_lanes = None
     if args.autoscale:
@@ -120,8 +168,8 @@ def main():
                             min_lanes=min_lanes, max_lanes=max_lanes)
 
     t_start = time.perf_counter()
-    for name, db, dm in seqs:
-        sched.submit(name, db, dm)
+    for name, db, dm, dc, de in seqs:
+        sched.submit(name, db, dm, det_class=dc, det_embed=de)
     total_frames = 0
     for tracks in sched.run():                  # drains in submission order
         mot.write_results(os.path.join(args.out, f"{tracks.name}.txt"),
@@ -130,7 +178,9 @@ def main():
     dt = time.perf_counter() - t_start
     mode = ("chunk-resident megakernel" if args.chunk_kernel
             else "fused lane-persistent" if args.fused
-            else "per-phase") + f" / {args.assoc}"
+            else "per-phase") + f" / {args.assoc} / {args.cost}"
+    if args.classes > 1:
+        mode += f" / {args.classes} classes"
     if args.devices > 1:
         mode += f" / {args.devices}-device lane mesh"
     lanes_str = f"{args.lanes} lanes"

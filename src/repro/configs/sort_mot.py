@@ -5,6 +5,7 @@ the population axis (sharded over pod x data), slot capacity covers paper
 Table I's max of 13 simultaneous objects with headroom."""
 import dataclasses
 
+from repro.core import cost
 from repro.core.sort import SortConfig
 
 
@@ -67,6 +68,19 @@ ELASTIC = SortServiceConfig(
                     max_age=1, min_hits=3, assoc="hungarian",
                     use_kernels=True),
     min_lanes=256, max_lanes=2048)
+
+# Class-partitioned multi-class serving (DESIGN.md §10): the FUSED engine
+# with a 3-way class partition and an appearance-embedding cost term.
+# Cross-class det/track pairs are masked infeasible, so the one
+# lane-batched assignment solves the block-diagonal per-class problem —
+# same dispatch count, same zero-collective sharding as FUSED.  Steps
+# consume det_class/det_embed operands
+# (StreamScheduler.submit(..., det_class=, det_embed=)).
+MULTICLASS = SortServiceConfig(
+    sort=SortConfig(max_trackers=16, max_detections=16, iou_threshold=0.3,
+                    max_age=1, min_hits=3, assoc="hungarian",
+                    use_kernels=True, cost=cost.iou_embed(embed_dim=8),
+                    num_classes=3))
 
 SMOKE = SortServiceConfig(
     sort=SortConfig(max_trackers=8, max_detections=8, assoc="hungarian"),

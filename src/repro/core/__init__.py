@@ -1,9 +1,11 @@
 """Core SORT library — the paper's contribution as composable JAX modules.
 
 Kalman filter (tiny-matrix batched), Hungarian assignment (lax), IoU
-association, slot-pool lifecycle, and the batched SortEngine.
+association, pluggable cost composition (``cost``, DESIGN.md §10),
+slot-pool lifecycle, and the batched SortEngine.
 """
-from . import association, bbox, hungarian, kalman, metrics, slots  # noqa: F401
+from . import (association, bbox, cost, greedy, hungarian,  # noqa: F401
+               kalman, metrics, slots)
 from .sort import (LaneSortState, SortConfig, SortEngine,  # noqa: F401
                    SortOutput, SortState, lane_state_of, reset_lanes,
                    reset_ragged, reset_streams, resize_streams,

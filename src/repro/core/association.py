@@ -37,14 +37,19 @@ class Association(NamedTuple):
 def associate(det_boxes: jnp.ndarray, det_mask: jnp.ndarray,
               trk_boxes: jnp.ndarray, trk_mask: jnp.ndarray,
               iou_threshold: float = 0.3,
-              iou_fn=None) -> Association:
+              iou_fn=None, score=None, feasible=None) -> Association:
     """SORT association for a batch of streams.
 
     det_boxes ``[..., D, 4]`` xyxy; trk_boxes ``[..., T, 4]`` xyxy (predicted);
     masks flag valid rows.  ``iou_fn`` allows swapping in the Pallas kernel.
+    ``score`` / ``feasible`` (optional, ``[..., D, T]``) plug in a
+    composed association cost (``core.cost``, DESIGN.md §10): the solve
+    runs on ``score`` while the IoU threshold still gates post-solve, and
+    ``feasible=False`` pairs are masked out of the solve entirely.
     """
     iou = (iou_fn or bbox.iou_matrix)(det_boxes, trk_boxes)  # [..., D, T]
-    return associate_from_iou(iou, det_mask, trk_mask, iou_threshold)
+    return associate_from_iou(iou, det_mask, trk_mask, iou_threshold,
+                              score=score, feasible=feasible)
 
 
 def _all_unmatched(iou: jnp.ndarray, det_mask: jnp.ndarray,
@@ -65,24 +70,36 @@ def _all_unmatched(iou: jnp.ndarray, det_mask: jnp.ndarray,
 
 def associate_from_iou(iou: jnp.ndarray, det_mask: jnp.ndarray,
                        trk_mask: jnp.ndarray,
-                       iou_threshold: float = 0.3) -> Association:
+                       iou_threshold: float = 0.3,
+                       score=None, feasible=None) -> Association:
     """The solve + gate + invert core of :func:`associate`, starting from a
-    precomputed IoU matrix ``[..., D, T]`` (batch leading)."""
+    precomputed IoU matrix ``[..., D, T]`` (batch leading).
+
+    ``score [..., D, T]`` (optional) replaces IoU as the solver's
+    maximization objective (the composed cost of ``core.cost``); the IoU
+    threshold still gates post-solve.  ``feasible [..., D, T]`` (optional)
+    hard-masks pairs out of the solve (class partition / Mahalanobis
+    gate) *and* out of the gate, so an infeasible pair can never match.
+    With both ``None`` this is byte-for-byte the original IoU-only path.
+    """
     d, t = iou.shape[-2], iou.shape[-1]
     if d == 0 or t == 0:  # static shapes: zero tracker slots / detections
         return _all_unmatched(iou, det_mask, trk_mask)
     n = max(d, t)
-    cost = -iou
-    col4row = hungarian.solve_masked(cost, det_mask, trk_mask, n)  # [..., n]
-    return _gate_and_invert(iou, det_mask, trk_mask, col4row, iou_threshold)
+    cost = -(iou if score is None else score)
+    col4row = hungarian.solve_masked(cost, det_mask, trk_mask, n,
+                                     pair_mask=feasible)  # [..., n]
+    return _gate_and_invert(iou, det_mask, trk_mask, col4row, iou_threshold,
+                            feasible=feasible)
 
 
 def _gate_and_invert(iou, det_mask, trk_mask, col4row,
-                     iou_threshold) -> Association:
+                     iou_threshold, feasible=None) -> Association:
     """Shared gate + inversion: validate each detection's solver column
-    (in-range, valid tracker, IoU above threshold) and scatter the matching
-    into tracker-major form.  Both layouts' entry points funnel here, so
-    their match decisions are identical by construction."""
+    (in-range, valid tracker, IoU above threshold, pair feasible) and
+    scatter the matching into tracker-major form.  Both layouts' entry
+    points funnel here, so their match decisions are identical by
+    construction."""
     d, t = iou.shape[-2], iou.shape[-1]
     det_idx = jnp.arange(d)
     assigned_col = col4row[..., :d]                        # [..., D]
@@ -96,6 +113,10 @@ def _gate_and_invert(iou, det_mask, trk_mask, col4row,
             & in_range
             & pair_trk_valid
             & (pair_iou >= iou_threshold))
+    if feasible is not None:
+        pair_feasible = jnp.take_along_axis(
+            feasible, safe_col[..., None], axis=-1)[..., 0]
+        good = good & pair_feasible
 
     det_to_trk = jnp.where(good, safe_col, -1).astype(jnp.int32)
     # invert: tracker slot -> detection.  Scatter each good det's index into
@@ -116,7 +137,8 @@ def _gate_and_invert(iou, det_mask, trk_mask, col4row,
 
 
 def associate_lane(iou: jnp.ndarray, det_mask: jnp.ndarray,
-                   trk_mask: jnp.ndarray, iou_threshold: float = 0.3):
+                   trk_mask: jnp.ndarray, iou_threshold: float = 0.3,
+                   score=None, feasible=None):
     """Hungarian association on the kernels' lane layout (DESIGN.md §6).
 
     ``iou [D, T, *lanes]``, ``det_mask [D, *lanes]``, ``trk_mask
@@ -124,6 +146,8 @@ def associate_lane(iou: jnp.ndarray, det_mask: jnp.ndarray,
     matched_det [D, *lanes] bool)`` — the inverted form the fused SORT
     frame step consumes (the same pair ``core.greedy.greedy_assign_lane``
     returns, so the two association modes are drop-in interchangeable).
+    ``score`` / ``feasible`` (optional, ``[D, T, *lanes]``) carry the
+    composed association cost exactly as in :func:`associate_from_iou`.
 
     One transpose to the batch layout, then the identical
     solve + gate + invert core as :func:`associate` (the per-lane JV
@@ -140,7 +164,12 @@ def associate_lane(iou: jnp.ndarray, det_mask: jnp.ndarray,
     iou_b = jnp.moveaxis(iou.reshape(d, t, -1), -1, 0)          # [L, D, T]
     dm_b = jnp.moveaxis((det_mask > 0).reshape(d, -1), -1, 0)   # [L, D]
     tm_b = jnp.moveaxis((trk_mask > 0).reshape(t, -1), -1, 0)   # [L, T]
-    a = associate_from_iou(iou_b, dm_b, tm_b, iou_threshold)
+    sc_b = (None if score is None
+            else jnp.moveaxis(score.reshape(d, t, -1), -1, 0))
+    fe_b = (None if feasible is None
+            else jnp.moveaxis(feasible.reshape(d, t, -1), -1, 0))
+    a = associate_from_iou(iou_b, dm_b, tm_b, iou_threshold,
+                           score=sc_b, feasible=fe_b)
     trk_to_det = jnp.moveaxis(a.trk_to_det, 0, -1).reshape((t,) + lanes)
     matched_det = jnp.moveaxis(a.matched_det, 0, -1).reshape((d,) + lanes)
     return trk_to_det, matched_det

@@ -1,0 +1,240 @@
+"""Pluggable association costs (DESIGN.md §10).
+
+The association step scores every (detection, tracker) pair and solves an
+assignment on the resulting *extremely small* matrix.  The score has
+always been plain IoU; this module makes it a composable spec:
+
+``score = iou_weight * IoU  +  embed_weight * <det_embed, trk_embed>``
+
+plus two *hard feasibility* terms that mask pairs out of the solve
+entirely (cost-matrix masking, not score shaping):
+
+* **class partition** — when the engine runs ``num_classes > 1``, a
+  detection can only match a tracker of the same class.  Masking the
+  cross-class pairs makes the cost matrix block-diagonal by class, so
+  Hungarian and greedy both solve every per-class sub-problem in a
+  single lane-batched call — no per-class loop, no extra dispatches
+  (the CORT observation from PAPERS.md, in our sweet spot: the blocks
+  are even smaller than the already-tiny full matrix).
+* **Mahalanobis gate** — the classic motion gate: a pair is feasible
+  only if the squared Mahalanobis distance of the detection's observation
+  from the tracker's *predicted* observation distribution
+  (``S = H P' Hᵀ + R``, the innovation covariance) is under a chi²
+  quantile.
+
+Both evaluators exist in **both layouts** — batch-major ``[..., D, T]``
+for the per-phase engine path and lane-major ``[D, T, lanes]`` for the
+fused kernels — sharing the same trace-time-unrolled term order, exactly
+as ``associate`` / ``associate_lane`` share ``_gate_and_invert``.  The
+IoU threshold stays a *post-solve* gate (``association._gate_and_invert``
+semantics); feasibility additionally enters that gate so an infeasible
+pair can never survive the solve.
+
+The default spec (pure IoU, one class) produces ``score=None,
+feasible=None`` everywhere, which keeps every downstream consumer on the
+byte-identical pre-existing code path — single-class IoU runs are
+bit-identical to an engine without this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["CHI2_GATE_4DOF", "CostSpec", "IOU", "iou_maha", "iou_embed",
+           "parse_cost", "needs_score", "needs_feasible",
+           "score_and_feasible_batch", "score_and_feasible_lane"]
+
+# 0.95 quantile of the chi-squared distribution with 4 degrees of freedom
+# (one per observed dimension of z = [x, y, s, r]) — the standard
+# Mahalanobis gate threshold (DeepSORT uses the same quantile family).
+CHI2_GATE_4DOF = 9.487729036781154
+
+
+@dataclasses.dataclass(frozen=True)
+class CostSpec:
+    """A composable association cost: IoU ⊕ Mahalanobis gate ⊕ embedding.
+
+    Frozen and hashable, so it rides inside ``SortConfig`` and through
+    jit static arguments unchanged.
+
+    * ``iou_weight`` — weight of the IoU term in the score.
+    * ``maha_gate`` — chi² threshold on the squared Mahalanobis distance
+      (``None`` = no motion gate).  A *hard* feasibility mask.
+    * ``embed_weight`` / ``embed_dim`` — appearance term: the dot product
+      of L2-normalizable per-detection / per-track embedding vectors of
+      length ``embed_dim``, scaled by ``embed_weight``.
+    """
+
+    iou_weight: float = 1.0
+    maha_gate: Optional[float] = None
+    embed_weight: float = 0.0
+    embed_dim: int = 0
+
+    def __post_init__(self):
+        if self.embed_weight != 0.0 and self.embed_dim <= 0:
+            raise ValueError(
+                f"embed_weight={self.embed_weight} needs embed_dim > 0")
+        if self.embed_dim < 0:
+            raise ValueError(f"embed_dim must be >= 0, got {self.embed_dim}")
+        if self.maha_gate is not None and self.maha_gate <= 0.0:
+            raise ValueError(f"maha_gate must be > 0, got {self.maha_gate}")
+
+    @property
+    def uses_maha(self) -> bool:
+        return self.maha_gate is not None
+
+    @property
+    def uses_embed(self) -> bool:
+        return self.embed_weight != 0.0 and self.embed_dim > 0
+
+    @property
+    def is_iou_only(self) -> bool:
+        """True when the score is plain IoU with no extra feasibility —
+        the config that must stay bit-identical to the pre-cost engine."""
+        return (self.iou_weight == 1.0 and not self.uses_maha
+                and not self.uses_embed)
+
+
+IOU = CostSpec()
+
+
+def iou_maha(gate: float = CHI2_GATE_4DOF) -> CostSpec:
+    """IoU score + hard Mahalanobis motion gate."""
+    return CostSpec(maha_gate=gate)
+
+
+def iou_embed(embed_dim: int, weight: float = 0.5) -> CostSpec:
+    """IoU score blended with an appearance-embedding dot product."""
+    return CostSpec(embed_weight=weight, embed_dim=embed_dim)
+
+
+def parse_cost(name: str, embed_dim: int = 4) -> CostSpec:
+    """CLI spelling -> :class:`CostSpec` (``examples/tracking_service.py
+    --cost``)."""
+    if name == "iou":
+        return IOU
+    if name == "iou+maha":
+        return iou_maha()
+    if name == "iou+embed":
+        return iou_embed(embed_dim)
+    raise ValueError(f"unknown cost {name!r}; pick from "
+                     f"'iou', 'iou+maha', 'iou+embed'")
+
+
+def needs_score(cost: CostSpec) -> bool:
+    """True when the solve must run on a combined score instead of raw
+    IoU.  False keeps the solver inputs byte-identical to the pre-cost
+    path (the bit-identity contract)."""
+    return cost.iou_weight != 1.0 or cost.uses_embed
+
+
+def needs_feasible(cost: CostSpec, num_classes: int) -> bool:
+    """True when a hard pair-feasibility mask must enter the solve."""
+    return num_classes > 1 or cost.uses_maha
+
+
+# --------------------------------------------------------------- Mahalanobis
+def _innovation_inv(p4):
+    """Inverse innovation covariance ``(P'₄ₓ₄ + R)⁻¹`` from the predicted
+    covariance's top-left 4×4 block, given as nested ``[[a₀₀..]..]`` lists
+    of same-shape arrays.  Uses the kernels' exact branch-free blockwise
+    SPD inverse so both layouts (and the in-kernel evaluation) share one
+    expression tree — identical floats, identical gate decisions."""
+    from repro.kernels import ref as kref
+
+    s = [[p4[i][j] + (kref.R_DIAG[i] if i == j else 0.0)
+          for j in range(4)] for i in range(4)]
+    return kref._inv4(s)
+
+
+def _maha_terms(y, sinv):
+    """``Σᵢⱼ yᵢ · S⁻¹ᵢⱼ · yⱼ`` with a fixed i-major / j-minor term order
+    (shared by both layout wrappers, so they accumulate identically)."""
+    d2 = None
+    for i in range(4):
+        for j in range(4):
+            term = y[i] * sinv[i][j] * y[j]
+            d2 = term if d2 is None else d2 + term
+    return d2
+
+
+# ----------------------------------------------------------- lane evaluator
+def score_and_feasible_lane(iou, cost: CostSpec, *, num_classes: int = 1,
+                            det_class=None, trk_cls=None,
+                            det_embed=None, trk_embed=None,
+                            z_det=None, x_pred=None, p4_pred=None):
+    """Lane-major score/feasibility for the fused kernels.
+
+    ``iou [D, T, ...]``; ``det_class [D, ...]`` / ``trk_cls [T, ...]``
+    int32; ``det_embed [D, E, ...]`` / ``trk_embed [E, T, ...]``;
+    ``z_det [4, D, ...]`` observations; ``x_pred [>=4, T, ...]``
+    *post-predict* means; ``p4_pred`` the post-predict covariance's 4×4
+    block as nested lists of ``[T, ...]`` arrays.
+
+    Returns ``(score, feasible)`` with ``None`` for any term the spec
+    does not use — so the pure-IoU single-class config hands the solvers
+    exactly the arguments they got before this module existed.  Every
+    loop is trace-time unrolled (kernel-safe, DESIGN.md §2.3) and the
+    term order matches :func:`score_and_feasible_batch` exactly.
+    """
+    score = None
+    if needs_score(cost):
+        score = cost.iou_weight * iou
+        if cost.uses_embed:
+            dot = None
+            for e in range(cost.embed_dim):
+                term = det_embed[:, e][:, None] * trk_embed[e][None]
+                dot = term if dot is None else dot + term
+            score = score + cost.embed_weight * dot
+    feasible = None
+    if num_classes > 1:
+        feasible = det_class[:, None] == trk_cls[None]
+    if cost.uses_maha:
+        sinv = _innovation_inv(p4_pred)
+        y = [z_det[i][:, None] - x_pred[i][None] for i in range(4)]
+        d2 = _maha_terms(y, [[sinv[i][j][None] for j in range(4)]
+                             for i in range(4)])
+        ok = d2 <= cost.maha_gate
+        feasible = ok if feasible is None else feasible & ok
+    return score, feasible
+
+
+# ---------------------------------------------------------- batch evaluator
+def score_and_feasible_batch(iou, cost: CostSpec, *, num_classes: int = 1,
+                             det_class=None, trk_cls=None,
+                             det_embed=None, trk_embed=None,
+                             z_det=None, x_pred=None, p4_pred=None):
+    """Batch-major twin of :func:`score_and_feasible_lane` for the
+    per-phase engine path.
+
+    ``iou [..., D, T]``; ``det_class [..., D]`` / ``trk_cls [..., T]``;
+    ``det_embed [..., D, E]`` / ``trk_embed [..., T, E]``;
+    ``z_det [..., D, 4]``; ``x_pred [..., T, >=4]`` post-predict means;
+    ``p4_pred [..., T, 4, 4]`` the post-predict covariance block.
+
+    Same unrolled term order as the lane evaluator, so per-pair scores
+    and gate decisions are bit-identical across layouts.
+    """
+    score = None
+    if needs_score(cost):
+        score = cost.iou_weight * iou
+        if cost.uses_embed:
+            dot = None
+            for e in range(cost.embed_dim):
+                term = (det_embed[..., :, e][..., :, None]
+                        * trk_embed[..., :, e][..., None, :])
+                dot = term if dot is None else dot + term
+            score = score + cost.embed_weight * dot
+    feasible = None
+    if num_classes > 1:
+        feasible = det_class[..., :, None] == trk_cls[..., None, :]
+    if cost.uses_maha:
+        p4 = [[p4_pred[..., i, j] for j in range(4)] for i in range(4)]
+        sinv = _innovation_inv(p4)
+        y = [z_det[..., :, i][..., :, None] - x_pred[..., :, i][..., None, :]
+             for i in range(4)]
+        d2 = _maha_terms(y, [[sinv[i][j][..., None, :] for j in range(4)]
+                             for i in range(4)])
+        ok = d2 <= cost.maha_gate
+        feasible = ok if feasible is None else feasible & ok
+    return score, feasible

@@ -14,14 +14,30 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+# Retirement sentinel / stop threshold for the general scored path: a
+# composed score (weighted IoU + embedding term, ``core.cost``) can be
+# legitimately negative, so the IoU path's ``-1.0 / > 0.0`` pair would
+# misread real scores as exhausted.  Mirrored exactly by the numpy oracle
+# (``core.ref_numpy``), so greedy decisions stay comparable bit for bit.
+_NEG = -1.0e30
+_STOP = -1.0e29
+
 
 def greedy_assign(iou: jnp.ndarray, det_mask: jnp.ndarray,
-                  trk_mask: jnp.ndarray, iou_threshold: float = 0.3):
+                  trk_mask: jnp.ndarray, iou_threshold: float = 0.3,
+                  score=None, feasible=None):
     """Best-first matching on an IoU matrix.
 
     ``iou [..., D, T]``; returns ``det_to_trk [..., D] int32`` (-1 =
     unmatched).  Iteratively takes the globally best remaining pair above
     the threshold — ``min(D, T)`` rounds of masked argmax.
+
+    ``score [..., D, T]`` (optional) replaces IoU as the best-first
+    objective (the IoU threshold still gates pair validity); ``feasible
+    [..., D, T]`` (optional) hard-masks pairs (class partition /
+    Mahalanobis gate, DESIGN.md §10).  With ``score=None`` the original
+    ``-1.0``-sentinel path runs byte-identically; a provided score uses
+    the ``_NEG`` sentinel so genuinely negative scores stay matchable.
     """
     d, t = iou.shape[-2], iou.shape[-1]
     batch = iou.shape[:-2]
@@ -29,7 +45,11 @@ def greedy_assign(iou: jnp.ndarray, det_mask: jnp.ndarray,
         return jnp.full(batch + (d,), -1, jnp.int32)
     valid = (det_mask[..., :, None] & trk_mask[..., None, :]
              & (iou >= iou_threshold))
-    score = jnp.where(valid, iou, -1.0)
+    if feasible is not None:
+        valid = valid & feasible
+    sentinel = -1.0 if score is None else _NEG
+    stop = 0.0 if score is None else _STOP
+    score = jnp.where(valid, iou if score is None else score, sentinel)
     n_rounds = min(d, t)
 
     def body(carry, _):
@@ -38,7 +58,7 @@ def greedy_assign(iou: jnp.ndarray, det_mask: jnp.ndarray,
         idx = jnp.argmax(flat, axis=-1)
         best = jnp.take_along_axis(flat, idx[..., None], -1)[..., 0]
         di, ti = idx // t, idx % t
-        ok = best > 0.0
+        ok = best > stop
         # record the match
         upd = jnp.where(ok, ti.astype(jnp.int32), -1)
         out = _set_at(out, jnp.where(ok, di, d), upd)          # overflow row d
@@ -46,7 +66,7 @@ def greedy_assign(iou: jnp.ndarray, det_mask: jnp.ndarray,
         row_dead = jnp.arange(d) == jnp.where(ok, di, -1)[..., None]
         col_dead = jnp.arange(t) == jnp.where(ok, ti, -1)[..., None]
         score = jnp.where(row_dead[..., None] | col_dead[..., None, :],
-                          -1.0, score)
+                          sentinel, score)
         return (score, out), None
 
     out0 = jnp.full(batch + (d,), -1, jnp.int32)
@@ -55,7 +75,8 @@ def greedy_assign(iou: jnp.ndarray, det_mask: jnp.ndarray,
 
 
 def greedy_assign_lane(iou: jnp.ndarray, det_mask: jnp.ndarray,
-                       trk_mask: jnp.ndarray, iou_threshold: float = 0.3):
+                       trk_mask: jnp.ndarray, iou_threshold: float = 0.3,
+                       score=None, feasible=None):
     """Lane-layout port of :func:`greedy_assign` (DESIGN.md §2).
 
     Batch on the *trailing* axes so the per-round masked argmax runs once
@@ -65,6 +86,9 @@ def greedy_assign_lane(iou: jnp.ndarray, det_mask: jnp.ndarray,
     inverted form the SORT update consumes, matching what
     :func:`greedy_assign` + scatter-inversion produce (same flat row-major
     ``d*T + t`` argmax order, so tie-breaking is identical).
+    ``score`` / ``feasible`` (optional, ``[D, T, ...]``) carry the
+    composed association cost with the same sentinel rules as
+    :func:`greedy_assign`, so both layouts decide identically.
 
     The round loop is a trace-time-unrolled ``min(D, T)`` iterations of
     pure elementwise/reduce ops, so it is legal inside a Pallas kernel
@@ -74,7 +98,11 @@ def greedy_assign_lane(iou: jnp.ndarray, det_mask: jnp.ndarray,
     lanes = iou.shape[2:]
     valid = ((det_mask[:, None] > 0) & (trk_mask[None, :] > 0)
              & (iou >= iou_threshold))
-    score = jnp.where(valid, iou, -1.0)
+    if feasible is not None:
+        valid = valid & feasible
+    sentinel = -1.0 if score is None else _NEG
+    stop = 0.0 if score is None else _STOP
+    score = jnp.where(valid, iou if score is None else score, sentinel)
     trk_to_det = jnp.full((t,) + lanes, -1, jnp.int32)
     matched_det = jnp.zeros((d,) + lanes, bool)
     di_iota = jnp.arange(d, dtype=jnp.int32).reshape((d,) + (1,) * len(lanes))
@@ -84,13 +112,14 @@ def greedy_assign_lane(iou: jnp.ndarray, det_mask: jnp.ndarray,
         flat = score.reshape((d * t,) + lanes)
         idx = jnp.argmax(flat, axis=0).astype(jnp.int32)     # [...]
         best = jnp.max(flat, axis=0)
-        ok = best > 0.0
+        ok = best > stop
         di, ti = idx // t, idx % t
         hit_trk = (ti_iota == ti[None]) & ok[None]           # [T, ...]
         hit_det = (di_iota == di[None]) & ok[None]           # [D, ...]
         trk_to_det = jnp.where(hit_trk, di[None], trk_to_det)
         matched_det = matched_det | hit_det
-        score = jnp.where(hit_det[:, None] | hit_trk[None, :], -1.0, score)
+        score = jnp.where(hit_det[:, None] | hit_trk[None, :],
+                          sentinel, score)
     return trk_to_det, matched_det
 
 
@@ -113,30 +142,45 @@ def greedy_iou_fn_for_engine(iou_threshold: float = 0.3):
     from . import association
 
     def associate_greedy(det_boxes, det_mask, trk_boxes, trk_mask,
-                         thr=iou_threshold, iou_fn=None):
+                         thr=iou_threshold, iou_fn=None,
+                         score=None, feasible=None):
         from . import bbox
         iou = (iou_fn or bbox.iou_matrix)(det_boxes, trk_boxes)
-        det_to_trk = greedy_assign(iou, det_mask, trk_mask, thr)
-        d, t = iou.shape[-2], iou.shape[-1]
-        batch = iou.shape[:-2]
-        good = det_to_trk >= 0
-        safe = jnp.where(good, det_to_trk, 0)
-        overflow = jnp.full(batch + (t + 1,), -1, jnp.int32)
-        scatter_idx = jnp.where(good, safe, t)
-        src = jnp.broadcast_to(jnp.arange(d), det_to_trk.shape) \
-            .astype(jnp.int32)
-        flat = overflow.reshape(-1, t + 1)
-        rows = jnp.arange(flat.shape[0])[:, None]
-        trk_to_det = flat.at[
-            rows, scatter_idx.reshape(-1, d)].set(
-            src.reshape(-1, d)).reshape(batch + (t + 1,))[..., :t]
-        matched_trk = trk_to_det >= 0
-        return association.Association(
-            det_to_trk=jnp.where(good, safe, -1).astype(jnp.int32),
-            trk_to_det=trk_to_det,
-            matched_det=good, matched_trk=matched_trk,
-            unmatched_det=det_mask & ~good,
-            unmatched_trk=trk_mask & ~matched_trk,
-            iou=iou)
+        return greedy_associate_from_iou(iou, det_mask, trk_mask, thr,
+                                         score=score, feasible=feasible)
 
     return associate_greedy
+
+
+def greedy_associate_from_iou(iou, det_mask, trk_mask,
+                              iou_threshold: float = 0.3,
+                              score=None, feasible=None):
+    """Greedy twin of ``association.associate_from_iou``: best-first solve
+    on a precomputed IoU matrix ``[..., D, T]``, inverted into the full
+    :class:`~repro.core.association.Association` the engine consumes.
+    ``score`` / ``feasible`` plug in the composed cost (``core.cost``)."""
+    from . import association
+
+    det_to_trk = greedy_assign(iou, det_mask, trk_mask, iou_threshold,
+                               score=score, feasible=feasible)
+    d, t = iou.shape[-2], iou.shape[-1]
+    batch = iou.shape[:-2]
+    good = det_to_trk >= 0
+    safe = jnp.where(good, det_to_trk, 0)
+    overflow = jnp.full(batch + (t + 1,), -1, jnp.int32)
+    scatter_idx = jnp.where(good, safe, t)
+    src = jnp.broadcast_to(jnp.arange(d), det_to_trk.shape) \
+        .astype(jnp.int32)
+    flat = overflow.reshape(-1, t + 1)
+    rows = jnp.arange(flat.shape[0])[:, None]
+    trk_to_det = flat.at[
+        rows, scatter_idx.reshape(-1, d)].set(
+        src.reshape(-1, d)).reshape(batch + (t + 1,))[..., :t]
+    matched_trk = trk_to_det >= 0
+    return association.Association(
+        det_to_trk=jnp.where(good, safe, -1).astype(jnp.int32),
+        trk_to_det=trk_to_det,
+        matched_det=good, matched_trk=matched_trk,
+        unmatched_det=det_mask & ~good,
+        unmatched_trk=trk_mask & ~matched_trk,
+        iou=iou)

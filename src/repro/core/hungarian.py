@@ -44,12 +44,24 @@ def auto_pad_value(cost: jnp.ndarray, valid: jnp.ndarray, n: int) -> jnp.ndarray
 
 
 def pad_cost_matrix(cost: jnp.ndarray, row_mask: jnp.ndarray, col_mask: jnp.ndarray,
-                    n: int, pad_value=None) -> jnp.ndarray:
+                    n: int, pad_value=None, pair_mask=None) -> jnp.ndarray:
     """Embed a masked ``[..., R, C]`` cost into an ``[..., n, n]`` padded square
-    matrix.  ``pad_value=None`` selects the precision-safe adaptive pad."""
+    matrix.  ``pad_value=None`` selects the precision-safe adaptive pad.
+
+    ``pair_mask [..., R, C]`` (optional) marks individual pairs infeasible
+    on top of the row/col masks — the hook for class partitioning and the
+    Mahalanobis gate (DESIGN.md §10).  Infeasible pairs take the same pad
+    value as masked rows/cols, so the solver maximizes the number of
+    *feasible* matches; with a class-equality mask the feasible pairs
+    decompose into disjoint per-class blocks, making one padded solve
+    exactly equivalent to solving each class's sub-problem separately
+    (block-diagonal matching in a single lane-batched call).
+    """
     r, c = cost.shape[-2], cost.shape[-1]
     assert n >= r and n >= c, (n, r, c)
     valid = row_mask[..., :, None] & col_mask[..., None, :]
+    if pair_mask is not None:
+        valid = valid & pair_mask
     if pad_value is None:
         pad_value = auto_pad_value(cost, valid, n)
     pad_value = jnp.asarray(pad_value, cost.dtype)[..., None, None]
@@ -142,20 +154,24 @@ def solve_batched(cost: jnp.ndarray) -> jnp.ndarray:
 
 
 def solve_masked(cost: jnp.ndarray, row_mask: jnp.ndarray, col_mask: jnp.ndarray,
-                 n: int) -> jnp.ndarray:
+                 n: int, pair_mask=None) -> jnp.ndarray:
     """Masked rectangular assignment.
 
     Returns ``col4row [..., n]`` where entry ``i`` is the assigned column for
     row ``i``, or an arbitrary pad column when row ``i`` is invalid or was
     matched to padding.  Callers must re-validate matches (e.g. by IoU gate);
-    SORT does this anyway.
+    SORT does this anyway.  ``pair_mask [..., R, C]`` marks individual
+    pairs infeasible (see :func:`pad_cost_matrix`) — an infeasible
+    assignment can survive only as a padding match, which the caller's
+    gate discards.
     """
-    padded = pad_cost_matrix(cost, row_mask, col_mask, n)
+    padded = pad_cost_matrix(cost, row_mask, col_mask, n, pair_mask=pair_mask)
     return solve_batched(padded)
 
 
 def solve_masked_lane(cost: jnp.ndarray, row_mask: jnp.ndarray,
-                      col_mask: jnp.ndarray, n: int) -> jnp.ndarray:
+                      col_mask: jnp.ndarray, n: int,
+                      pair_mask=None) -> jnp.ndarray:
     """:func:`solve_masked` for the kernels' *lane layout* (DESIGN.md §2):
     the batch lives on the trailing lane axes, the tiny matrix on the
     leading ones — ``cost [R, C, *lanes]``, ``row_mask [R, *lanes]``,
@@ -176,5 +192,7 @@ def solve_masked_lane(cost: jnp.ndarray, row_mask: jnp.ndarray,
     cost_b = jnp.moveaxis(cost.reshape(r, c, -1), -1, 0)       # [L, R, C]
     rm_b = jnp.moveaxis((row_mask > 0).reshape(r, -1), -1, 0)  # [L, R]
     cm_b = jnp.moveaxis((col_mask > 0).reshape(c, -1), -1, 0)  # [L, C]
-    out = solve_masked(cost_b, rm_b, cm_b, n)                  # [L, n]
+    pm_b = (None if pair_mask is None
+            else jnp.moveaxis(pair_mask.reshape(r, c, -1), -1, 0))
+    out = solve_masked(cost_b, rm_b, cm_b, n, pair_mask=pm_b)  # [L, n]
     return jnp.moveaxis(out, 0, -1).reshape((n,) + lanes)

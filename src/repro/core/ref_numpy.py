@@ -41,9 +41,14 @@ def iou(a, b):
 
 
 class KalmanBoxTracker:
-    """One tracker, constant-velocity model — filterpy-equivalent numpy."""
+    """One tracker, constant-velocity model — filterpy-equivalent numpy.
 
-    def __init__(self, box, uid):
+    ``cls`` is the track's object class (frozen at birth; DESIGN.md §10)
+    and ``embed`` its appearance embedding, replaced by each matched
+    detection's — mirroring the engine's per-track class/embed state.
+    """
+
+    def __init__(self, box, uid, cls=0, embed=None):
         dim_x, dim_z = 7, 4
         self.F = np.eye(dim_x)
         self.F[0, 4] = self.F[1, 5] = self.F[2, 6] = 1.0
@@ -55,6 +60,8 @@ class KalmanBoxTracker:
         self.x = np.zeros(dim_x)
         self.x[:4] = xyxy_to_z(box)
         self.uid = uid
+        self.cls = cls
+        self.embed = embed
         self.time_since_update = 0
         self.hits = 0
         self.hit_streak = 0
@@ -71,16 +78,26 @@ class KalmanBoxTracker:
         self.time_since_update += 1
         return z_to_xyxy(self.x)
 
-    def update(self, box):
+    def update(self, box, embed=None):
         self.time_since_update = 0
         self.hits += 1
         self.hit_streak += 1
+        if embed is not None:
+            self.embed = embed
         z = xyxy_to_z(box)
         y = z - self.H @ self.x
         s = self.H @ self.P @ self.H.T + self.R
         k = self.P @ self.H.T @ np.linalg.inv(s)
         self.x = self.x + k @ y
         self.P = (np.eye(7) - k @ self.H) @ self.P
+
+    def maha_d2(self, box):
+        """Squared Mahalanobis distance of ``box``'s observation from the
+        *post-predict* observation distribution (innovation covariance
+        ``S = P'₄ₓ₄ + R`` — call after :meth:`predict`)."""
+        y = xyxy_to_z(box) - self.x[:4]
+        s = self.P[:4, :4] + self.R
+        return float(y @ np.linalg.inv(s) @ y)
 
 
 class Sort:
@@ -96,28 +113,42 @@ class Sort:
     """
 
     def __init__(self, max_age=1, min_hits=3, iou_threshold=0.3,
-                 assoc="hungarian"):
+                 assoc="hungarian", cost=None, num_classes=1):
+        from . import cost as cost_mod  # numpy-safe: no jax at module level
+
         if assoc not in ("hungarian", "greedy"):
             raise ValueError(f"unknown assoc {assoc!r}")
         self.max_age = max_age
         self.min_hits = min_hits
         self.iou_threshold = iou_threshold
         self.assoc = assoc
+        self.cost = cost_mod.IOU if cost is None else cost
+        self.num_classes = num_classes
         self.trackers: list[KalmanBoxTracker] = []
         self.frame_count = 0
         self.next_uid = 1
 
-    def update(self, dets: np.ndarray):
-        """``dets [D, 4]`` xyxy -> list of ``(x1, y1, x2, y2, uid)``."""
+    def update(self, dets: np.ndarray, classes=None, embeds=None):
+        """``dets [D, 4]`` xyxy -> list of ``(x1, y1, x2, y2, uid, cls)``.
+
+        ``classes [D]`` int / ``embeds [D, E]`` (optional) feed the
+        composed cost, mirroring ``SortEngine.step``'s ``det_class`` /
+        ``det_embed`` operands.
+        """
         self.frame_count += 1
         preds = [t.predict() for t in self.trackers]
 
         # associate
-        matches, unmatched_dets, unmatched_trks = self._associate(dets, preds)
+        matches, unmatched_dets, unmatched_trks = self._associate(
+            dets, preds, classes, embeds)
         for d, t in matches:
-            self.trackers[t].update(dets[d])
+            self.trackers[t].update(
+                dets[d], None if embeds is None else embeds[d])
         for d in unmatched_dets:
-            self.trackers.append(KalmanBoxTracker(dets[d], self.next_uid))
+            self.trackers.append(KalmanBoxTracker(
+                dets[d], self.next_uid,
+                cls=0 if classes is None else int(classes[d]),
+                embed=None if embeds is None else embeds[d]))
             self.next_uid += 1
 
         out = []
@@ -126,13 +157,38 @@ class Sort:
             if t.time_since_update < 1 and (
                     t.hit_streak >= self.min_hits
                     or self.frame_count <= self.min_hits):
-                out.append(np.concatenate([z_to_xyxy(t.x), [t.uid]]))
+                out.append(np.concatenate([z_to_xyxy(t.x), [t.uid, t.cls]]))
             if t.time_since_update <= self.max_age:
                 kept.append(t)
         self.trackers = kept
         return out
 
-    def _associate(self, dets, preds):
+    def _score_and_feasible(self, dets, mat, classes, embeds):
+        """Composed score + hard pair feasibility (class partition ∧
+        Mahalanobis gate) — the numpy mirror of
+        ``core.cost.score_and_feasible_batch`` over live trackers."""
+        nd, nt = mat.shape
+        cost = self.cost
+        score = cost.iou_weight * mat
+        if cost.uses_embed:
+            for i in range(nd):
+                for j in range(nt):
+                    score[i, j] += cost.embed_weight * float(
+                        np.dot(embeds[i], self.trackers[j].embed))
+        feasible = np.ones((nd, nt), bool)
+        if self.num_classes > 1:
+            for i in range(nd):
+                for j in range(nt):
+                    feasible[i, j] &= (int(classes[i])
+                                       == self.trackers[j].cls)
+        if cost.uses_maha:
+            for i in range(nd):
+                for j in range(nt):
+                    feasible[i, j] &= (self.trackers[j].maha_d2(dets[i])
+                                       <= cost.maha_gate)
+        return score, feasible
+
+    def _associate(self, dets, preds, classes=None, embeds=None):
         nd, nt = len(dets), len(preds)
         if nd == 0 or nt == 0:
             return [], list(range(nd)), list(range(nt))
@@ -140,8 +196,12 @@ class Sort:
         for i in range(nd):
             for j in range(nt):
                 mat[i, j] = iou(dets[i], preds[j])
+        plain = self.cost.is_iou_only and self.num_classes == 1
+        if not plain:
+            score, feasible = self._score_and_feasible(
+                dets, mat, classes, embeds)
         matches, md, mt = [], set(), set()
-        if self.assoc == "greedy":
+        if self.assoc == "greedy" and plain:
             # global best-first; flat row-major argmax = det-major
             # tie-breaking, mirroring core.greedy.greedy_assign
             score = np.where(mat >= self.iou_threshold, mat, -1.0)
@@ -154,10 +214,45 @@ class Sort:
                 mt.add(j)
                 score[i, :] = -1.0
                 score[:, j] = -1.0
-        else:
+        elif self.assoc == "greedy":
+            # scored path: core.greedy's _NEG/_STOP sentinels so genuinely
+            # negative composed scores stay matchable
+            s = np.where((mat >= self.iou_threshold) & feasible,
+                         score, -1.0e30)
+            for _ in range(min(nd, nt)):
+                i, j = divmod(int(np.argmax(s)), nt)
+                if s[i, j] <= -1.0e29:
+                    break
+                matches.append((i, j))
+                md.add(i)
+                mt.add(j)
+                s[i, :] = -1.0e30
+                s[:, j] = -1.0e30
+        elif plain:
             ri, ci = linear_sum_assignment(-mat)
             for i, j in zip(ri, ci):
                 if mat[i, j] >= self.iou_threshold:
+                    matches.append((i, j))
+                    md.add(i)
+                    mt.add(j)
+        else:
+            # mirror core.hungarian.pad_cost_matrix: embed the feasible
+            # pairs in an n x n square whose pad is precision-safe yet
+            # always loses to any real match (a fixed huge constant would
+            # absorb the real score differences), so one solve equals the
+            # per-class block-diagonal solves
+            cost_m = -score
+            vals = cost_m[feasible]
+            cmax = max(float(vals.max()), 0.0) if vals.size else 0.0
+            cmin = min(float(vals.min()), 0.0) if vals.size else 0.0
+            n = max(nd, nt)
+            pad = cmax + n * (cmax - cmin) + 1.0
+            solve = np.full((n, n), pad)
+            solve[:nd, :nt] = np.where(feasible, cost_m, pad)
+            ri, ci = linear_sum_assignment(solve)
+            for i, j in zip(ri, ci):
+                if (i < nd and j < nt and feasible[i, j]
+                        and mat[i, j] >= self.iou_threshold):
                     matches.append((i, j))
                     md.add(i)
                     mt.add(j)

@@ -36,6 +36,11 @@ class SlotPool(NamedTuple):
     ``hit_streak``: consecutive successful updates.
     ``time_since_update``: steps since last successful update.
     ``uid``: globally unique id (per stream), -1 when dead.
+    ``cls``: object class of the slot's entity (DESIGN.md §10), -1 when
+    dead.  Set once at birth from the claiming detection's class (0 for
+    single-class runs) and constant for the track's lifetime — the class
+    partition makes cross-class matches infeasible, so a track can never
+    be updated by a detection of another class.
     ``next_uid``: ``[...]`` per-stream counter for id assignment.  Grows
     monotonically for the stream's lifetime and resets to ``uid_start``
     only on re-init (``core.sort.reset_ragged``), so recycled lanes start
@@ -50,6 +55,7 @@ class SlotPool(NamedTuple):
     hit_streak: jnp.ndarray
     time_since_update: jnp.ndarray
     uid: jnp.ndarray
+    cls: jnp.ndarray
     next_uid: jnp.ndarray
 
     @property
@@ -68,6 +74,7 @@ def init_pool(batch_shape: tuple, capacity: int, uid_start: int = 1) -> SlotPool
         alive=jnp.zeros(shape, bool),
         age=z, hits=z, hit_streak=z, time_since_update=z,
         uid=jnp.full(shape, -1, jnp.int32),
+        cls=jnp.full(shape, -1, jnp.int32),
         next_uid=jnp.full(batch_shape, uid_start, jnp.int32),
     )
 
@@ -109,8 +116,12 @@ def assign_slots(free_mask: jnp.ndarray, want_mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(ok, slot_for, -1).astype(jnp.int32)
 
 
-def birth(pool: SlotPool, slot_for: jnp.ndarray) -> SlotPool:
-    """Activate claimed slots (``slot_for`` from :func:`assign_slots`)."""
+def birth(pool: SlotPool, slot_for: jnp.ndarray,
+          det_class=None) -> SlotPool:
+    """Activate claimed slots (``slot_for`` from :func:`assign_slots`).
+
+    ``det_class [..., D] int32`` (optional) stamps each born slot with its
+    claiming detection's class; ``None`` births class 0 (single-class)."""
     t = pool.capacity
     batch = pool.alive.shape[:-1]
     claimed = slot_for >= 0                                  # [..., D]
@@ -128,6 +139,8 @@ def birth(pool: SlotPool, slot_for: jnp.ndarray) -> SlotPool:
     order = jnp.cumsum(claimed, axis=-1) - 1
     uids = pool.next_uid[..., None] + jnp.where(claimed, order, 0)
     n_born = claimed.sum(axis=-1)
+    cls_val = (jnp.zeros(target.shape, jnp.int32) if det_class is None
+               else det_class.astype(jnp.int32))
     return SlotPool(
         alive=scat(pool.alive, True),
         age=scat(pool.age, 0),
@@ -135,6 +148,7 @@ def birth(pool: SlotPool, slot_for: jnp.ndarray) -> SlotPool:
         hit_streak=scat(pool.hit_streak, 0),
         time_since_update=scat(pool.time_since_update, 0),
         uid=scat(pool.uid, uids.astype(jnp.int32)),
+        cls=scat(pool.cls, cls_val),
         next_uid=pool.next_uid + n_born.astype(jnp.int32),
     )
 
@@ -163,7 +177,7 @@ def resize_pool(pool: SlotPool, num_streams: int,
         return pool._replace(
             **{f: getattr(pool, f)[:num_streams]
                for f in ("alive", "age", "hits", "hit_streak",
-                         "time_since_update", "uid")},
+                         "time_since_update", "uid", "cls")},
             next_uid=pool.next_uid[:num_streams])
     grow = ((0, num_streams - s), (0, 0))
     zero_grow = {f: jnp.pad(getattr(pool, f), grow)
@@ -171,6 +185,7 @@ def resize_pool(pool: SlotPool, num_streams: int,
     return pool._replace(
         alive=jnp.pad(pool.alive, grow),
         uid=jnp.pad(pool.uid, grow, constant_values=-1),
+        cls=jnp.pad(pool.cls, grow, constant_values=-1),
         next_uid=jnp.pad(pool.next_uid, ((0, num_streams - s),),
                          constant_values=uid_start),
         **zero_grow)
@@ -189,7 +204,7 @@ def transpose_pool(pool: SlotPool) -> SlotPool:
     return pool._replace(
         **{f: jnp.moveaxis(getattr(pool, f), -1, 0)
            for f in ("alive", "age", "hits", "hit_streak",
-                     "time_since_update", "uid")})
+                     "time_since_update", "uid", "cls")})
 
 
 def assign_slots_lane(free_mask: jnp.ndarray, want_mask: jnp.ndarray) -> jnp.ndarray:
@@ -200,10 +215,13 @@ def assign_slots_lane(free_mask: jnp.ndarray, want_mask: jnp.ndarray) -> jnp.nda
     return jnp.moveaxis(out, -1, 0)
 
 
-def birth_lane(pool: SlotPool, slot_for: jnp.ndarray) -> SlotPool:
+def birth_lane(pool: SlotPool, slot_for: jnp.ndarray,
+               det_class=None) -> SlotPool:
     """:func:`birth` for a lane-layout pool (fields ``[T, ...]``,
-    ``slot_for [D, ...]``)."""
-    born = birth(transpose_pool(pool), jnp.moveaxis(slot_for, 0, -1))
+    ``slot_for [D, ...]``, ``det_class [D, ...]``)."""
+    born = birth(transpose_pool(pool), jnp.moveaxis(slot_for, 0, -1),
+                 det_class=(None if det_class is None
+                            else jnp.moveaxis(det_class, 0, -1)))
     return transpose_pool(born)
 
 
@@ -229,4 +247,5 @@ def tick(pool: SlotPool, matched: jnp.ndarray, max_age: int) -> SlotPool:
                              jnp.where(miss, 0, pool.hit_streak)),
         time_since_update=tsu,
         uid=jnp.where(new_alive, pool.uid, -1),
+        cls=jnp.where(new_alive, pool.cls, -1),
     )

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from . import association, bbox, greedy, kalman, slots
+from . import cost as cost_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +74,17 @@ class SortConfig:
     # stay bit-identical.  Requires use_kernels=True (it is the fused lane
     # path at chunk granularity).
     chunk_kernel: bool = False
+    # pluggable association cost (core.cost, DESIGN.md §10): the default
+    # pure-IoU spec keeps every path byte-identical to the pre-cost
+    # engine; other specs add the Mahalanobis gate and/or an appearance-
+    # embedding term, and require det_embed inputs when embed_dim > 0.
+    cost: cost_mod.CostSpec = cost_mod.IOU
+    # > 1 partitions association by object class: cross-class pairs are
+    # infeasible (cost-matrix masking), so Hungarian/greedy solve the
+    # block-diagonal per-class problem in one lane-batched call, and the
+    # engine consumes/propagates det_class inputs (tracks carry their
+    # class through lifecycle, recycling, and SortOutput.cls).
+    num_classes: int = 1
 
 
 class SortState(NamedTuple):
@@ -80,6 +92,11 @@ class SortState(NamedTuple):
     p: jnp.ndarray        # [S, T, 7, 7] covariances
     pool: slots.SlotPool  # [S, T] lifecycle
     frame_count: jnp.ndarray  # [S] int32
+    # [S, T, E] per-track appearance embeddings (DESIGN.md §10); E =
+    # config.cost.embed_dim, a zero-size array when the cost has no
+    # appearance term.  Last field so positional construction of the
+    # pre-embed fields stays valid in older call sites/tests.
+    embed: jnp.ndarray = None
 
 
 class LaneSortState(NamedTuple):
@@ -105,6 +122,9 @@ class LaneSortState(NamedTuple):
     p: jnp.ndarray        # [49, B]  lane-major covariances (row-major 7x7)
     pool: slots.SlotPool  # [T, S_pad] lane-major lifecycle
     frame_count: jnp.ndarray  # [S_pad] int32
+    # [E, B] lane-major appearance embeddings (zero-size when unused);
+    # reshapes to [E, T, S_pad] exactly like x (same lane ordering)
+    embed: jnp.ndarray = None
 
 
 def _pad_streams(s: int, block_s: int) -> int:
@@ -128,14 +148,18 @@ def lane_state_of(state: SortState, block_s: int) -> LaneSortState:
         time_since_update=jnp.pad(state.pool.time_since_update,
                                   ((0, grow), (0, 0))),
         uid=jnp.pad(state.pool.uid, ((0, grow), (0, 0)), constant_values=-1),
+        cls=jnp.pad(state.pool.cls, ((0, grow), (0, 0)), constant_values=-1),
         next_uid=jnp.pad(state.pool.next_uid, ((0, grow),),
                          constant_values=1),
     )
+    embed = jnp.pad(state.embed, ((0, grow), (0, 0), (0, 0)))
+    e = embed.shape[-1]
     return LaneSortState(
         x=x.transpose(2, 1, 0).reshape(kalman.DIM_X, t * sp),
         p=p.reshape(sp, t, 49).transpose(2, 1, 0).reshape(49, t * sp),
         pool=slots.transpose_pool(pool),
         frame_count=jnp.pad(state.frame_count, ((0, grow),)),
+        embed=embed.transpose(2, 1, 0).reshape(e, t * sp),
     )
 
 
@@ -151,14 +175,16 @@ def sort_state_of(lane: LaneSortState, num_streams: int) -> SortState:
     pool = pool._replace(
         **{f: getattr(pool, f)[:s]
            for f in ("alive", "age", "hits", "hit_streak",
-                     "time_since_update", "uid")},
+                     "time_since_update", "uid", "cls")},
         next_uid=pool.next_uid[:s])
-    return SortState(x, p, pool, lane.frame_count[:s])
+    e = lane.embed.shape[0]
+    embed = lane.embed.reshape(e, t, sp)[..., :s].transpose(2, 1, 0)
+    return SortState(x, p, pool, lane.frame_count[:s], embed)
 
 
 # SlotPool fields carrying a slot axis (next_uid is per-stream only)
 _POOL_SLOT_FIELDS = ("alive", "age", "hits", "hit_streak",
-                     "time_since_update", "uid")
+                     "time_since_update", "uid", "cls")
 
 
 def _select_pool(slot_mask: jnp.ndarray, stream_mask: jnp.ndarray,
@@ -187,6 +213,7 @@ def _reset_pool(pool: slots.SlotPool, reset_lane_major: jnp.ndarray,
         time_since_update=jnp.where(reset_lane_major, zero,
                                     pool.time_since_update),
         uid=jnp.where(reset_lane_major, -1, pool.uid),
+        cls=jnp.where(reset_lane_major, -1, pool.cls),
         next_uid=jnp.where(reset_streams_, uid_start, pool.next_uid),
     )
 
@@ -207,6 +234,7 @@ def reset_streams(state: SortState, reset: jnp.ndarray,
         p=jnp.where(r1[..., None, None], p0, state.p),
         pool=_reset_pool(state.pool, r1, reset, uid_start),
         frame_count=jnp.where(reset, 0, state.frame_count),
+        embed=jnp.where(r1[..., None], 0.0, state.embed),
     )
 
 
@@ -227,11 +255,14 @@ def reset_lanes(lane: LaneSortState, reset: jnp.ndarray,
     p0 = kalman.initial_covariance(lane.p.dtype).reshape(49)
     x3 = jnp.where(r_lane[None], 0.0, x3)
     p3 = jnp.where(r_lane[None], p0[:, None, None], p3)
+    e = lane.embed.shape[0]
+    e3 = jnp.where(r_lane[None], 0.0, lane.embed.reshape(e, t, sp))
     return LaneSortState(
         x=x3.reshape(kalman.DIM_X, t * sp),
         p=p3.reshape(49, t * sp),
         pool=_reset_pool(lane.pool, r_lane, reset, uid_start),
         frame_count=jnp.where(reset, 0, lane.frame_count),
+        embed=e3.reshape(e, t * sp),
     )
 
 
@@ -252,6 +283,7 @@ def chunk_state_of(lane: LaneSortState):
 
     t = lane.pool.alive.shape[0]
     sp = lane.frame_count.shape[0]
+    e = lane.embed.shape[0]
     return kref.ChunkState(
         x=lane.x.reshape(kalman.DIM_X, t, sp),
         p=lane.p.reshape(49, t, sp),
@@ -259,9 +291,10 @@ def chunk_state_of(lane: LaneSortState):
         age=lane.pool.age, hits=lane.pool.hits,
         hit_streak=lane.pool.hit_streak,
         time_since_update=lane.pool.time_since_update,
-        uid=lane.pool.uid,
+        uid=lane.pool.uid, cls=lane.pool.cls,
         next_uid=lane.pool.next_uid[None, :],
-        frame_count=lane.frame_count[None, :])
+        frame_count=lane.frame_count[None, :],
+        embed=lane.embed.reshape(e, t, sp))
 
 
 def lane_state_of_chunk(cs) -> LaneSortState:
@@ -269,13 +302,15 @@ def lane_state_of_chunk(cs) -> LaneSortState:
     persistent lane layout (exact inverse of :func:`chunk_state_of`)."""
     t = cs.alive.shape[0]
     sp = cs.frame_count.shape[1]
+    e = cs.embed.shape[0]
     pool = slots.SlotPool(
         alive=cs.alive > 0, age=cs.age, hits=cs.hits,
         hit_streak=cs.hit_streak, time_since_update=cs.time_since_update,
-        uid=cs.uid, next_uid=cs.next_uid[0])
+        uid=cs.uid, cls=cs.cls, next_uid=cs.next_uid[0])
     return LaneSortState(x=cs.x.reshape(kalman.DIM_X, t * sp),
                          p=cs.p.reshape(49, t * sp), pool=pool,
-                         frame_count=cs.frame_count[0])
+                         frame_count=cs.frame_count[0],
+                         embed=cs.embed.reshape(e, t * sp))
 
 
 def resize_streams(state: SortState, num_streams: int) -> SortState:
@@ -303,13 +338,15 @@ def resize_streams(state: SortState, num_streams: int) -> SortState:
         return SortState(
             x=state.x[:num_streams], p=state.p[:num_streams],
             pool=slots.resize_pool(state.pool, num_streams),
-            frame_count=state.frame_count[:num_streams])
+            frame_count=state.frame_count[:num_streams],
+            embed=state.embed[:num_streams])
     grow = num_streams - s
     wide = SortState(
         x=jnp.pad(state.x, ((0, grow), (0, 0), (0, 0))),
         p=jnp.pad(state.p, ((0, grow), (0, 0), (0, 0), (0, 0))),
         pool=slots.resize_pool(state.pool, num_streams),
-        frame_count=jnp.pad(state.frame_count, ((0, grow),)))
+        frame_count=jnp.pad(state.frame_count, ((0, grow),)),
+        embed=jnp.pad(state.embed, ((0, grow), (0, 0), (0, 0))))
     # masked re-init of exactly the appended tail: the padded x/p above are
     # placeholders; reset_streams writes the true init values (initial
     # covariance included), reusing the scheduler's recycling primitive.
@@ -321,6 +358,10 @@ class SortOutput(NamedTuple):
     uid: jnp.ndarray      # [S, T] track id, -1 if dead
     emit: jnp.ndarray     # [S, T] bool — confirmed tracks to report this frame
     matched_det: jnp.ndarray  # [S, D] bool (for metrics)
+    # [S, T] int32 object class per slot (-1 if dead / single-class run);
+    # last field with a default so positional construction of the
+    # pre-multiclass fields stays valid in older call sites/tests.
+    cls: jnp.ndarray = None
 
 
 class SortEngine:
@@ -352,6 +393,15 @@ class SortEngine:
                 "chunk_kernel=True is the chunk-resident megakernel over "
                 "the fused lane path (DESIGN.md §9); it requires "
                 "use_kernels=True.")
+        if config.num_classes < 1:
+            raise ValueError(
+                f"num_classes must be >= 1, got {config.num_classes}")
+        if assoc_fn is not None and not (config.cost.is_iou_only
+                                         and config.num_classes == 1):
+            raise ValueError(
+                "assoc_fn injection bypasses the engine's cost composition; "
+                "it only applies to the default single-class IoU config "
+                "(cost=IOU, num_classes=1).")
         self.config = config
         self.params = kalman.KalmanParams.default(jnp.dtype(config.dtype))
         # stream padding only buys anything on TPU, where it must match the
@@ -381,20 +431,29 @@ class SortEngine:
                                 kalman.DIM_X, kalman.DIM_X)).copy(),
             pool=slots.init_pool((num_streams,), cfg.max_trackers),
             frame_count=jnp.zeros((num_streams,), jnp.int32),
+            embed=jnp.zeros((num_streams, cfg.max_trackers,
+                             cfg.cost.embed_dim), dt),
         )
 
     # ------------------------------------------------------------------- step
     def step(self, state: SortState, det_boxes: jnp.ndarray,
-             det_mask: jnp.ndarray) -> tuple[SortState, SortOutput]:
+             det_mask: jnp.ndarray, det_class: Optional[jnp.ndarray] = None,
+             det_embed: Optional[jnp.ndarray] = None,
+             ) -> tuple[SortState, SortOutput]:
         """One frame for every stream.
 
-        ``det_boxes [S, D, 4]`` xyxy, ``det_mask [S, D]``.
+        ``det_boxes [S, D, 4]`` xyxy, ``det_mask [S, D]``.  ``det_class
+        [S, D] int32`` / ``det_embed [S, D, E]`` (optional) feed the
+        pluggable association cost (DESIGN.md §10): required when
+        ``config.num_classes > 1`` / ``config.cost.embed_dim > 0``.
         """
+        self._check_cost_inputs(det_class, det_embed)
         if self.config.use_kernels:
             # boundary convenience: single frames convert both ways; the
             # resident fast path is run(), which converts once per video.
             lane, out = self.lane_step(
-                lane_state_of(state, self._block_s), det_boxes, det_mask)
+                lane_state_of(state, self._block_s), det_boxes, det_mask,
+                det_class=det_class, det_embed=det_embed)
             return sort_state_of(lane, det_boxes.shape[0]), out
 
         cfg = self.config
@@ -405,9 +464,27 @@ class SortEngine:
         trk_boxes = bbox.z_to_xyxy(x[..., :4])
 
         # 2. associate (config.assoc: Hungarian by default; injectable)
-        assoc = self._assoc(det_boxes, det_mask, trk_boxes,
-                            pool.alive, cfg.iou_threshold,
-                            iou_fn=self._iou)
+        if cfg.cost.is_iou_only and cfg.num_classes == 1:
+            assoc = self._assoc(det_boxes, det_mask, trk_boxes,
+                                pool.alive, cfg.iou_threshold,
+                                iou_fn=self._iou)
+        else:
+            # composed cost (DESIGN.md §10): score/feasible feed the same
+            # solve + gate + invert core the default path uses
+            iou = self._iou(det_boxes, trk_boxes)
+            score, feasible = cost_mod.score_and_feasible_batch(
+                iou, cfg.cost, num_classes=cfg.num_classes,
+                det_class=det_class, trk_cls=pool.cls,
+                det_embed=det_embed, trk_embed=state.embed,
+                z_det=(bbox.xyxy_to_z(det_boxes).astype(x.dtype)
+                       if cfg.cost.uses_maha else None),
+                x_pred=x if cfg.cost.uses_maha else None,
+                p4_pred=p[..., :4, :4] if cfg.cost.uses_maha else None)
+            from_iou = (greedy.greedy_associate_from_iou
+                        if cfg.assoc == "greedy"
+                        else association.associate_from_iou)
+            assoc = from_iou(iou, det_mask, pool.alive, cfg.iou_threshold,
+                             score=score, feasible=feasible)
 
         # 3. update matched trackers with their detection's observation
         safe_det = jnp.where(assoc.trk_to_det >= 0, assoc.trk_to_det, 0)
@@ -420,9 +497,23 @@ class SortEngine:
 
         # 4b. births from unmatched detections into free slots
         slot_for = slots.assign_slots(~pool.alive, assoc.unmatched_det)
-        pool = slots.birth(pool, slot_for)
+        pool = slots.birth(pool, slot_for, det_class=det_class)
         z_det = z_all.astype(x.dtype)
         x, p = _scatter_births(x, p, z_det, slot_for, jnp.dtype(cfg.dtype))
+
+        # 4c. appearance embeddings: matched tracks take their matched
+        # detection's embedding, born tracks their claiming detection's
+        # (the same replace discipline as the lane/chunk paths)
+        embed = state.embed
+        if cfg.cost.uses_embed:
+            t = cfg.max_trackers
+            de = det_embed.astype(embed.dtype)
+            m_e = jnp.take_along_axis(de, safe_det[..., None], axis=-2)
+            embed = jnp.where(assoc.matched_trk[..., None], m_e, embed)
+            target = jnp.where(slot_for >= 0, slot_for, t)  # overflow slot
+            ee = jnp.concatenate([embed, embed[:, :1]], axis=1)
+            rows = jnp.arange(embed.shape[0])[:, None]
+            embed = ee.at[rows, target].set(de)[:, :t]
 
         # 5. emit: updated this frame AND (probation passed OR warmup window)
         frame_count = state.frame_count + 1
@@ -433,14 +524,24 @@ class SortEngine:
 
         out = SortOutput(boxes=bbox.z_to_xyxy(x[..., :4]),
                          uid=pool.uid, emit=emit,
-                         matched_det=assoc.matched_det)
-        return SortState(x, p, pool, frame_count), out
+                         matched_det=assoc.matched_det, cls=pool.cls)
+        return SortState(x, p, pool, frame_count, embed), out
+
+    def _check_cost_inputs(self, det_class, det_embed):
+        cfg = self.config
+        if cfg.num_classes > 1 and det_class is None:
+            raise ValueError("num_classes > 1 needs det_class inputs")
+        if cfg.cost.uses_embed and det_embed is None:
+            raise ValueError(f"cost {cfg.cost} needs det_embed inputs "
+                             f"(embed_dim={cfg.cost.embed_dim})")
 
     # -------------------------------------------------- lane-persistent step
     def lane_step(self, lane: LaneSortState, det_boxes: jnp.ndarray,
                   det_mask: jnp.ndarray,
                   frame_mode: str = "auto",
                   stream_active: Optional[jnp.ndarray] = None,
+                  det_class: Optional[jnp.ndarray] = None,
+                  det_embed: Optional[jnp.ndarray] = None,
                   ) -> tuple[LaneSortState, SortOutput]:
         """One frame entirely in the persistent lane layout.
 
@@ -461,6 +562,7 @@ class SortEngine:
         from repro.kernels import ops as kops
         from repro.kernels import ref as kref
 
+        self._check_cost_inputs(det_class, det_embed)
         cfg = self.config
         s = det_boxes.shape[0]
         t = cfg.max_trackers
@@ -475,13 +577,31 @@ class SortEngine:
         act = (None if stream_active is None
                else jnp.pad(stream_active, ((0, sp - s),)))      # [Sp] bool
 
+        # pluggable-cost lane operands (DESIGN.md §10) — only materialized
+        # for the kernel when the spec needs them, so the default config's
+        # dispatch stays byte-identical
+        dc_l = (None if det_class is None
+                else jnp.pad(det_class.astype(jnp.int32),
+                             ((0, sp - s), (0, 0))).T)           # [D, Sp]
+        de_l = (None if det_embed is None
+                else jnp.pad(det_embed.astype(dt),
+                             ((0, sp - s), (0, 0), (0, 0))
+                             ).transpose(1, 2, 0))               # [D, E, Sp]
+        cost_kw = dict(cost=cfg.cost, num_classes=cfg.num_classes)
+        if cfg.num_classes > 1:
+            cost_kw.update(det_class=dc_l, trk_cls=lane.pool.cls)
+        if cfg.cost.uses_embed:
+            e = lane.embed.shape[0]
+            cost_kw.update(det_embed=de_l,
+                           trk_embed=lane.embed.reshape(e, t, sp))
+
         # 1-3. fused predict + IoU + assign + masked update (one dispatch;
         # the Hungarian mode's JV solve is a jitted stage feeding it)
         x3, p3, trk_to_det, matched_det = kops.frame_step(
             x3, p3, det_l, dm_l.astype(dt), alive.astype(dt),
             None if act is None else act.astype(dt)[None],
             iou_threshold=cfg.iou_threshold, block_s=self._block_s,
-            mode=frame_mode, assoc=cfg.assoc)
+            mode=frame_mode, assoc=cfg.assoc, **cost_kw)
 
         # 4a. age & kill (elementwise — runs lane-major as-is)
         pool = slots.tick(lane.pool, trk_to_det >= 0, cfg.max_age)
@@ -491,7 +611,7 @@ class SortEngine:
         if act is not None:
             unmatched_det = unmatched_det & act[None]
         slot_for = slots.assign_slots_lane(~pool.alive, unmatched_det)
-        pool = slots.birth_lane(pool, slot_for)
+        pool = slots.birth_lane(pool, slot_for, det_class=dc_l)
         z_det = kref.xyxy_to_z_lane(det_l)                       # [4, D, Sp]
         born = jnp.zeros((t, sp), bool)
         zb = jnp.zeros((4, t, sp), dt)
@@ -504,6 +624,20 @@ class SortEngine:
         p_init = kalman.initial_covariance(dt).reshape(49)
         x3 = jnp.where(born[None], x_init, x3)
         p3 = jnp.where(born[None], p_init[:, None, None], p3)
+
+        # 4c. appearance embeddings — the exact unrolled replace discipline
+        # of ref.step_chunk_lane (matched rounds then birth rounds), so the
+        # per-frame and chunk paths update embeds bit-identically
+        embed_flat = lane.embed
+        if cfg.cost.uses_embed:
+            emb = lane.embed.reshape(e, t, sp)
+            for di in range(de_l.shape[0]):                  # matched tracks
+                m_sel = (trk_to_det == di)[None]
+                emb = jnp.where(m_sel, de_l[di][:, None], emb)
+            for di in range(slot_for.shape[0]):              # born tracks
+                b_sel = (slot_for[di][None, :] == slot_iota)[None]
+                emb = jnp.where(b_sel, de_l[di][:, None], emb)
+            embed_flat = emb.reshape(e, t * sp)
 
         if act is not None:
             # inactive lanes: lifecycle freezes (the kernel already left
@@ -524,9 +658,11 @@ class SortEngine:
         boxes_l = kref.z_to_xyxy_lane(x3[:4])                    # [T, 4, Sp]
         out = SortOutput(boxes=boxes_l[..., :s].transpose(2, 0, 1),
                          uid=pool.uid[:, :s].T, emit=emit[:, :s].T,
-                         matched_det=matched_det[:, :s].T)
+                         matched_det=matched_det[:, :s].T,
+                         cls=pool.cls[:, :s].T)
         lane = LaneSortState(x3.reshape(kalman.DIM_X, t * sp),
-                             p3.reshape(49, t * sp), pool, frame_count)
+                             p3.reshape(49, t * sp), pool, frame_count,
+                             embed_flat)
         return lane, out
 
     def resize_ragged(self, state, num_lanes: int, new_num_lanes: int):
@@ -563,7 +699,9 @@ class SortEngine:
 
     def step_ragged(self, state, det_boxes: jnp.ndarray,
                     det_mask: jnp.ndarray, active: jnp.ndarray,
-                    frame_mode: str = "auto"):
+                    frame_mode: str = "auto",
+                    det_class: Optional[jnp.ndarray] = None,
+                    det_embed: Optional[jnp.ndarray] = None):
         """One frame for a ragged multiplex of sequences over fixed lanes.
 
         ``det_boxes [L, D, 4]``, ``det_mask [L, D]``, ``active [L]`` bool:
@@ -583,17 +721,21 @@ class SortEngine:
         if self.config.use_kernels:
             return self.lane_step(state, det_boxes, det_mask,
                                   frame_mode=frame_mode,
-                                  stream_active=active)
+                                  stream_active=active,
+                                  det_class=det_class,
+                                  det_embed=det_embed)
 
         a1 = active[:, None]                                     # [L, 1]
-        new, out = self.step(state, det_boxes, det_mask & a1)
+        new, out = self.step(state, det_boxes, det_mask & a1,
+                             det_class=det_class, det_embed=det_embed)
         pool = _select_pool(a1, active, new.pool, state.pool)
         masked = SortState(
             x=jnp.where(a1[..., None], new.x, state.x),
             p=jnp.where(a1[..., None, None], new.p, state.p),
             pool=pool,
             frame_count=jnp.where(active, new.frame_count,
-                                  state.frame_count))
+                                  state.frame_count),
+            embed=jnp.where(a1[..., None], new.embed, state.embed))
         out = out._replace(emit=out.emit & a1,
                            matched_det=out.matched_det & a1)
         return masked, out
@@ -601,7 +743,9 @@ class SortEngine:
     # ------------------------------------------------------ chunked stepping
     def run_chunk_ragged(self, state, det_boxes: jnp.ndarray,
                          det_mask: jnp.ndarray, active: jnp.ndarray,
-                         reset: jnp.ndarray, mode: str = "auto"):
+                         reset: jnp.ndarray, mode: str = "auto",
+                         det_class: Optional[jnp.ndarray] = None,
+                         det_embed: Optional[jnp.ndarray] = None):
         """One planned serving chunk — ``F`` ragged steps — in a single
         call: the scheduler's dispatch unit (DESIGN.md §3/§9).
 
@@ -625,17 +769,24 @@ class SortEngine:
         """
         cfg = self.config
         if not cfg.chunk_kernel:
+            present = [a is not None for a in (det_class, det_embed)]
+
             def body(st, inp):
-                d, m, a, r = inp
+                d, m, a, r = inp[:4]
+                it = iter(inp[4:])
+                dc, de = (next(it) if has else None for has in present)
                 # recycle + admitted sequence's first frame: same step
                 st = reset_ragged(st, r)
-                return self.step_ragged(st, d, m, a, frame_mode=mode)
+                return self.step_ragged(st, d, m, a, frame_mode=mode,
+                                        det_class=dc, det_embed=de)
 
-            return jax.lax.scan(body, state,
-                                (det_boxes, det_mask, active, reset))
+            xs = (det_boxes, det_mask, active, reset) + tuple(
+                a for a in (det_class, det_embed) if a is not None)
+            return jax.lax.scan(body, state, xs)
 
         from repro.kernels import ops as kops
 
+        self._check_cost_inputs(det_class, det_embed)
         l = active.shape[1]
         t = cfg.max_trackers
         sp = state.frame_count.shape[0]
@@ -650,48 +801,72 @@ class SortEngine:
                         ).astype(dt)[:, None, :]              # [F, 1, Sp]
         rst_l = jnp.pad(reset, ((0, 0), (0, grow))
                         ).astype(jnp.int32)[:, None, :]       # [F, 1, Sp]
+        dc_l = (None if det_class is None
+                else jnp.pad(det_class.astype(jnp.int32),
+                             ((0, 0), (0, grow), (0, 0))
+                             ).transpose(0, 2, 1))            # [F, D, Sp]
+        de_l = (None if det_embed is None
+                else jnp.pad(det_embed.astype(dt),
+                             ((0, 0), (0, grow), (0, 0), (0, 0))
+                             ).transpose(0, 2, 3, 1))         # [F, D, E, Sp]
         cs, outs = kops.chunk_step(
             chunk_state_of(state), det_l, dm_l, act_l, rst_l,
+            det_class=dc_l, det_embed=de_l,
             iou_threshold=cfg.iou_threshold, max_age=cfg.max_age,
             min_hits=cfg.min_hits, block_s=self._block_s, mode=mode,
-            assoc=cfg.assoc)
+            assoc=cfg.assoc, cost=cfg.cost, num_classes=cfg.num_classes)
         out = SortOutput(
             boxes=outs.boxes[..., :l].transpose(0, 3, 1, 2),  # [F, L, T, 4]
             uid=outs.uid[..., :l].transpose(0, 2, 1),
             emit=outs.emit[..., :l].transpose(0, 2, 1),
-            matched_det=outs.matched_det[..., :l].transpose(0, 2, 1))
+            matched_det=outs.matched_det[..., :l].transpose(0, 2, 1),
+            cls=outs.cls[..., :l].transpose(0, 2, 1))
         return lane_state_of_chunk(cs), out
 
     # -------------------------------------------------------------------- run
     def run(self, state: SortState, frames: jnp.ndarray,
-            frame_masks: jnp.ndarray) -> tuple[SortState, SortOutput]:
+            frame_masks: jnp.ndarray,
+            det_class: Optional[jnp.ndarray] = None,
+            det_embed: Optional[jnp.ndarray] = None,
+            ) -> tuple[SortState, SortOutput]:
         """Scan over the frame axis.
 
         ``frames [F, S, D, 4]``, ``frame_masks [F, S, D]`` ->
-        outputs stacked over ``F``.
+        outputs stacked over ``F``.  ``det_class [F, S, D] int32`` /
+        ``det_embed [F, S, D, E]`` (optional) feed the pluggable
+        association cost per frame (DESIGN.md §10).
 
         With ``use_kernels=True`` the state is converted to the persistent
         lane layout **once**, stays resident across the whole scan, and is
         converted back only here at the API boundary.
         """
+        present = [a is not None for a in (det_class, det_embed)]
+        xs = (frames, frame_masks) + tuple(
+            a for a in (det_class, det_embed) if a is not None)
+
         if self.config.use_kernels:
             num_streams = frames.shape[1]
 
             def lane_body(lst, inp):
-                boxes, mask = inp
-                return self.lane_step(lst, boxes, mask)
+                boxes, mask = inp[:2]
+                it = iter(inp[2:])
+                dc, de = (next(it) if has else None for has in present)
+                return self.lane_step(lst, boxes, mask,
+                                      det_class=dc, det_embed=de)
 
             lane0 = lane_state_of(state, self._block_s)
-            lane_f, outs = jax.lax.scan(lane_body, lane0,
-                                        (frames, frame_masks))
+            lane_f, outs = jax.lax.scan(lane_body, lane0, xs)
             return sort_state_of(lane_f, num_streams), outs
 
         def body(st, inp):
-            boxes, mask = inp
-            st, out = self.step(st, boxes, mask)
+            boxes, mask = inp[:2]
+            it = iter(inp[2:])
+            dc, de = (next(it) if has else None for has in present)
+            st, out = self.step(st, boxes, mask,
+                                det_class=dc, det_embed=de)
             return st, out
 
-        return jax.lax.scan(body, state, (frames, frame_masks))
+        return jax.lax.scan(body, state, xs)
 
 
 def _scatter_births(x, p, z_det, slot_for, dtype):

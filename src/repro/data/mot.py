@@ -34,34 +34,50 @@ TABLE_I = {
 
 
 def read_det_file(path_or_buf, min_conf: float = 0.0,
-                  max_dets: int | None = None):
+                  max_dets: int | None = None, with_extras: bool = False):
     """Parse a MOT15 ``det.txt``.
 
     Returns ``det_boxes [F, D, 4] float32`` (xyxy), ``det_mask [F, D] bool``.
+    With ``with_extras=True`` additionally returns ``det_class [F, D]
+    int32`` (column 8 — the slot MOT16+ ground truth uses for the object
+    class; ``-1`` where the file carries none) and ``det_conf [F, D]
+    float32`` (column 7), feeding the multi-class engine configs
+    (DESIGN.md §10) without a second parse.
     """
     if isinstance(path_or_buf, (str, os.PathLike)):
         with open(path_or_buf) as fh:
             raw = fh.read()
     else:
         raw = path_or_buf.read()
-    if not raw.strip():
+
+    def empty():
         # empty / whitespace-only det file (a sequence with no detections,
         # or write_det_file of a zero-frame batch): np.loadtxt would choke
         # parsing it, so short-circuit to the well-formed zero-frame batch.
-        return np.zeros((0, 1, 4), np.float32), np.zeros((0, 1), bool)
+        db = np.zeros((0, 1, 4), np.float32)
+        dm = np.zeros((0, 1), bool)
+        if not with_extras:
+            return db, dm
+        return db, dm, np.full((0, 1), -1, np.int32), np.zeros((0, 1),
+                                                               np.float32)
+
+    if not raw.strip():
+        return empty()
     rows = np.loadtxt(io.StringIO(raw), delimiter=",", ndmin=2)
     if rows.size == 0:
-        return np.zeros((0, 1, 4), np.float32), np.zeros((0, 1), bool)
+        return empty()
     frames = rows[:, 0].astype(int)
     conf_ok = rows[:, 6] >= min_conf
     rows, frames = rows[conf_ok], frames[conf_ok]
     if frames.size == 0:  # every row filtered out by min_conf
-        return np.zeros((0, 1, 4), np.float32), np.zeros((0, 1), bool)
+        return empty()
     f_max = int(frames.max())
     counts = np.bincount(frames - 1, minlength=f_max)
     d = int(counts.max()) if max_dets is None else max_dets
     det_boxes = np.zeros((f_max, d, 4), np.float32)
     det_mask = np.zeros((f_max, d), bool)
+    det_class = np.full((f_max, d), -1, np.int32)
+    det_conf = np.zeros((f_max, d), np.float32)
     cursor = np.zeros(f_max, int)
     for r in rows:
         t = int(r[0]) - 1
@@ -71,8 +87,13 @@ def read_det_file(path_or_buf, min_conf: float = 0.0,
         x, y, w, h = r[2], r[3], r[4], r[5]
         det_boxes[t, i] = [x, y, x + w, y + h]
         det_mask[t, i] = True
+        det_conf[t, i] = np.float32(r[6])
+        if len(r) > 7:
+            det_class[t, i] = int(round(float(r[7])))
         cursor[t] += 1
-    return det_boxes, det_mask
+    if not with_extras:
+        return det_boxes, det_mask
+    return det_boxes, det_mask, det_class, det_conf
 
 
 def write_results(path, boxes, uids, emit):
@@ -88,11 +109,20 @@ def write_results(path, boxes, uids, emit):
                          f"{x2 - x1:.2f},{y2 - y1:.2f},1,-1,-1,-1\n")
 
 
-def write_det_file(path, det_boxes, det_mask):
-    """Inverse of :func:`read_det_file` (used to round-trip synthetic data)."""
+def write_det_file(path, det_boxes, det_mask, det_class=None, det_conf=None):
+    """Inverse of :func:`read_det_file` (used to round-trip synthetic data).
+
+    ``det_class [F, D]`` int fills column 8 and ``det_conf [F, D]`` column 7
+    (``%.9g`` — enough significant digits that a float32 confidence
+    round-trips exactly); omitted they keep the historical ``-1`` / ``1``
+    placeholders, emitting byte-identical files to before.
+    """
     with open(path, "w") as fh:
         for t in range(det_boxes.shape[0]):
             for k in np.where(det_mask[t])[0]:
                 x1, y1, x2, y2 = det_boxes[t, k]
+                conf = ("1" if det_conf is None
+                        else f"{np.float32(det_conf[t, k]):.9g}")
+                c = -1 if det_class is None else int(det_class[t, k])
                 fh.write(f"{t + 1},-1,{x1:.2f},{y1:.2f},"
-                         f"{x2 - x1:.2f},{y2 - y1:.2f},1,-1,-1,-1\n")
+                         f"{x2 - x1:.2f},{y2 - y1:.2f},{conf},{c},-1,-1\n")

@@ -87,12 +87,15 @@ class SequenceTracks:
     bool — the rows of :class:`repro.core.SortOutput` that belonged to this
     sequence, in frame order, exactly as a solo run would have produced
     them (the ragged scheduler's lane-recycling invariant, DESIGN.md §3).
+    ``cls [F_i, T]`` int32 carries each slot's track class (DESIGN.md §10);
+    ``None`` for single-class serving.
     """
 
     name: str
     boxes: np.ndarray
     uid: np.ndarray
     emit: np.ndarray
+    cls: np.ndarray | None = None
 
     @property
     def num_frames(self) -> int:

@@ -117,6 +117,106 @@ def _step(tr, cfg):
     tr["traj"].append([cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2])
 
 
+def generate_multiclass_scene(cfg: SceneConfig, num_classes: int = 3,
+                              embed_dim: int = 4):
+    """Multi-class variant of :func:`generate_scene` (DESIGN.md §10).
+
+    Every ground-truth object carries a **class-stable** label (drawn once
+    at birth, never changes along the trajectory) and an identity-coded
+    one-hot appearance embedding (``eye[k % embed_dim]`` — dot products
+    are exactly 0 or 1, so f32/f64 evaluators agree bit for bit).  True
+    detections inherit their object's class/embedding; false positives
+    get random ones.
+
+    Returns ``(gt_boxes [F, K, 4], gt_mask [F, K], gt_class [K] int32,
+    det_boxes [F, D, 4], det_mask [F, D], det_class [F, D] int32,
+    det_embed [F, D, E] float32)``.
+    """
+    gt_boxes, gt_mask, _, _ = generate_scene(cfg)
+    rng = np.random.default_rng(cfg.seed + 7919)  # decouple from geometry
+    f, k = gt_mask.shape
+    gt_class = rng.integers(0, num_classes, size=k).astype(np.int32)
+    eye = np.eye(embed_dim, dtype=np.float32)
+    gt_embed = eye[np.arange(k) % embed_dim]
+    d_max = cfg.max_objects + max(2, int(3 * cfg.fp_rate))
+    det_boxes = np.zeros((f, d_max, 4), np.float32)
+    det_mask = np.zeros((f, d_max), bool)
+    det_class = np.zeros((f, d_max), np.int32)
+    det_embed = np.zeros((f, d_max, embed_dim), np.float32)
+    for t in range(f):
+        rows = []
+        for i in range(k):
+            if gt_mask[t, i] and rng.random() >= cfg.miss_rate:
+                box = (gt_boxes[t, i]
+                       + rng.normal(0, cfg.det_noise, 4)).astype(np.float32)
+                rows.append((box, int(gt_class[i]), gt_embed[i]))
+        for _ in range(rng.poisson(cfg.fp_rate)):
+            cx = rng.uniform(0, cfg.img_w)
+            cy = rng.uniform(0, cfg.img_h)
+            s = rng.uniform(0.5, 1.5) * cfg.mean_size
+            rows.append((np.array([cx - s / 2, cy - s / 2,
+                                   cx + s / 2, cy + s / 2], np.float32),
+                         int(rng.integers(num_classes)),
+                         eye[int(rng.integers(embed_dim))]))
+        rng.shuffle(rows)
+        for di, (box, c, e) in enumerate(rows[:d_max]):
+            det_boxes[t, di] = box
+            det_mask[t, di] = True
+            det_class[t, di] = c
+            det_embed[t, di] = e
+    return (gt_boxes, gt_mask, gt_class,
+            det_boxes, det_mask, det_class, det_embed)
+
+
+def generate_crossing_scene(num_frames: int = 40, num_objects: int = 4,
+                            num_classes: int = 2, embed_dim: int = 4,
+                            miss_rate: float = 0.0, det_noise: float = 0.0,
+                            seed: int = 0, img: float = 512.0,
+                            size: float = 40.0):
+    """Crowded crossing-paths scenario — maximal association ambiguity.
+
+    Objects start evenly spaced on a circle and move on straight lines
+    through the image center, so every pair crosses mid-sequence.  Classes
+    alternate round-robin (both same-class and cross-class crossings
+    occur — the class partition's regression scenario: a cross-class pair
+    may momentarily have the highest IoU but must never match).
+    ``miss_rate`` adds seeded detection dropout (occlusion-like gaps);
+    detection order is shuffled per frame so slot order never encodes
+    identity.
+
+    Returns the same 7-tuple layout as :func:`generate_multiclass_scene`.
+    """
+    rng = np.random.default_rng(seed)
+    f = num_frames
+    eye = np.eye(embed_dim, dtype=np.float32)
+    cls = (np.arange(num_objects) % num_classes).astype(np.int32)
+    ang = 2.0 * np.pi * np.arange(num_objects) / num_objects
+    r = img * 0.4
+    c0 = img / 2.0 + r * np.stack([np.cos(ang), np.sin(ang)], -1)
+    v = (img - 2.0 * c0) / max(f - 1, 1)       # reach the antipode at t=f-1
+    gt_boxes = np.zeros((f, num_objects, 4), np.float32)
+    gt_mask = np.ones((f, num_objects), bool)
+    det_boxes = np.zeros((f, num_objects, 4), np.float32)
+    det_mask = np.zeros((f, num_objects), bool)
+    det_class = np.zeros((f, num_objects), np.int32)
+    det_embed = np.zeros((f, num_objects, embed_dim), np.float32)
+    for t in range(f):
+        di = 0
+        for i in rng.permutation(num_objects):
+            c = c0[i] + v[i] * t
+            box = np.array([c[0] - size / 2, c[1] - size / 2,
+                            c[0] + size / 2, c[1] + size / 2], np.float32)
+            gt_boxes[t, i] = box
+            if rng.random() < miss_rate:
+                continue
+            det_boxes[t, di] = box + rng.normal(0, det_noise, 4)
+            det_mask[t, di] = True
+            det_class[t, di] = cls[i]
+            det_embed[t, di] = eye[i % embed_dim]
+            di += 1
+    return gt_boxes, gt_mask, cls, det_boxes, det_mask, det_class, det_embed
+
+
 def generate_batch(num_streams: int, cfg: SceneConfig):
     """Stack ``num_streams`` independent scenes -> dense stream batch.
 

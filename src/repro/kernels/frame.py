@@ -45,14 +45,22 @@ DEFAULT_BLOCK_S = 128
 
 
 def _frame_kernel(x_ref, p_ref, det_ref, dm_ref, alive_ref, *refs,
-                  iou_threshold: float, has_active: bool, has_assoc: bool):
+                  iou_threshold: float, has_active: bool, has_assoc: bool,
+                  has_class: bool, has_embed: bool, cost, num_classes: int):
     refs = list(refs)
     active = refs.pop(0)[...] if has_active else None
     t2d_in = refs.pop(0)[...] if has_assoc else None
+    det_class = refs.pop(0)[...] if has_class else None
+    trk_cls = refs.pop(0)[...] if has_class else None
+    det_embed = refs.pop(0)[...] if has_embed else None
+    trk_embed = refs.pop(0)[...] if has_embed else None
     xo_ref, po_ref, t2d_ref, md_ref = refs
     x, p, t2d, md = ref.frame_lane(
         x_ref[...], p_ref[...], det_ref[...], dm_ref[...], alive_ref[...],
-        iou_threshold, active=active, trk_to_det=t2d_in)
+        iou_threshold, active=active, trk_to_det=t2d_in,
+        det_class=det_class, trk_cls=trk_cls,
+        det_embed=det_embed, trk_embed=trk_embed,
+        cost=cost, num_classes=num_classes)
     xo_ref[...] = x
     po_ref[...] = p
     t2d_ref[...] = t2d
@@ -60,9 +68,12 @@ def _frame_kernel(x_ref, p_ref, det_ref, dm_ref, alive_ref, *refs,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("iou_threshold", "block_s", "interpret"))
+                   static_argnames=("iou_threshold", "block_s", "interpret",
+                                    "cost", "num_classes"))
 def fused_frame(x, p, det, det_mask, alive, stream_active=None,
-                trk_to_det=None, *, iou_threshold: float = 0.3,
+                trk_to_det=None, det_class=None, trk_cls=None,
+                det_embed=None, trk_embed=None, *,
+                iou_threshold: float = 0.3, cost=None, num_classes: int = 1,
                 block_s: int = DEFAULT_BLOCK_S, interpret: bool = False):
     """One SORT frame for every stream in a single dispatch.
 
@@ -77,11 +88,22 @@ def fused_frame(x, p, det, det_mask, alive, stream_active=None,
     assignment (DESIGN.md §6): the kernel then skips its in-VMEM IoU +
     greedy phases and runs predict -> gather-by-assignment -> masked
     update — the fused-Hungarian path, whose JV solve stage ran outside.
+
+    ``cost`` (``core.cost.CostSpec``, static) + ``num_classes`` activate
+    the pluggable association score/gate (DESIGN.md §10) with its
+    conditional lane operands — ``det_class [D, S]`` / ``trk_cls [T, S]``
+    int32 and ``det_embed [D, E, S]`` / ``trk_embed [E, T, S]`` — each a
+    block-sliced VMEM input only when present, exactly like
+    ``stream_active``/``trk_to_det``.
     Returns ``(x, p, trk_to_det [T, S] int32, matched_det [D, S] int32)``.
     """
     t, s = x.shape[1], x.shape[2]
     d = det.shape[0]
     assert s % block_s == 0, (s, block_s)
+    has_class = det_class is not None
+    has_embed = det_embed is not None
+    assert has_class == (trk_cls is not None)
+    assert has_embed == (trk_embed is not None)
 
     def spec3(a, b):
         return pl.BlockSpec((a, b, block_s), lambda i: (0, 0, i))
@@ -95,11 +117,20 @@ def fused_frame(x, p, det, det_mask, alive, stream_active=None,
     if trk_to_det is not None:
         operands.append(trk_to_det)
         in_specs.append(lane_spec(t, block_s))
+    if has_class:
+        operands += [det_class, trk_cls]
+        in_specs += [lane_spec(d, block_s), lane_spec(t, block_s)]
+    if has_embed:
+        e = det_embed.shape[1]
+        operands += [det_embed, trk_embed]
+        in_specs += [spec3(d, e), spec3(e, t)]
 
     return pl.pallas_call(
         functools.partial(_frame_kernel, iou_threshold=iou_threshold,
                           has_active=stream_active is not None,
-                          has_assoc=trk_to_det is not None),
+                          has_assoc=trk_to_det is not None,
+                          has_class=has_class, has_embed=has_embed,
+                          cost=cost, num_classes=num_classes),
         grid=(s // block_s,),
         in_specs=in_specs,
         out_specs=[spec3(7, t), spec3(49, t),

@@ -98,8 +98,10 @@ def iou(det_boxes, trk_boxes, *, block_b: int = _iou_kernel.DEFAULT_BLOCK_B,
     return out[:, :, :s].transpose(2, 0, 1)
 
 
-def frame_step(x, p, det, det_mask, alive, stream_active=None, *,
-               iou_threshold: float = 0.3,
+def frame_step(x, p, det, det_mask, alive, stream_active=None,
+               det_class=None, trk_cls=None, det_embed=None,
+               trk_embed=None, *, iou_threshold: float = 0.3,
+               cost=None, num_classes: int = 1,
                block_s: int = _frame.DEFAULT_BLOCK_S,
                mode: str = "auto", assoc: str = "greedy"):
     """Single-dispatch fused frame (predict -> IoU -> assign -> update).
@@ -118,6 +120,11 @@ def frame_step(x, p, det, det_mask, alive, stream_active=None, *,
     ``[49, B]`` covariance still enters exactly one ``pallas_call`` per
     frame (no host round-trip, no state re-dispatch).
 
+    ``cost`` (``core.cost.CostSpec``) + ``num_classes`` plus their lane
+    operands — ``det_class [D, S]`` / ``trk_cls [T, S]`` int32,
+    ``det_embed [D, E, S]`` / ``trk_embed [E, T, S]`` — activate the
+    pluggable association score/gate (DESIGN.md §10) on every backend.
+
     ``mode``:
 
     * ``"auto"``   — compiled Pallas kernel on TPU, lane-layout oracle
@@ -129,24 +136,34 @@ def frame_step(x, p, det, det_mask, alive, stream_active=None, *,
         raise ValueError(f"unknown assoc {assoc!r}")
     if mode == "auto":
         mode = "pallas" if _on_tpu() else "ref"
+    cost_kw = dict(det_class=det_class, trk_cls=trk_cls,
+                   det_embed=det_embed, trk_embed=trk_embed,
+                   cost=cost, num_classes=num_classes)
     if mode == "ref":
         x, p, t2d, md = ref.frame_lane(x, p, det, det_mask, alive,
                                        iou_threshold, active=stream_active,
-                                       assoc=assoc)
+                                       assoc=assoc, **cost_kw)
         return x, p, t2d, md
     t2d_pre = (None if assoc != "hungarian"
-               else _hungarian_stage(x, det, det_mask, alive, stream_active,
-                                     iou_threshold))
+               else _hungarian_stage(x, p, det, det_mask, alive,
+                                     stream_active, iou_threshold,
+                                     **cost_kw))
+    if t2d_pre is not None:
+        # association decided in the pre-pass; the kernel only gathers by
+        # assignment, so the cost operands need not enter VMEM
+        cost_kw = {}
     x, p, t2d, md = _frame.fused_frame(
         x, p, det, det_mask, alive, stream_active, t2d_pre,
         iou_threshold=iou_threshold,
-        block_s=block_s, interpret=(mode == "interpret"))
+        block_s=block_s, interpret=(mode == "interpret"), **cost_kw)
     return x, p, t2d, md > 0
 
 
-def chunk_step(state, det, det_mask, active, reset, *,
+def chunk_step(state, det, det_mask, active, reset,
+               det_class=None, det_embed=None, *,
                iou_threshold: float = 0.3, max_age: int = 1,
-               min_hits: int = 3, block_s: int = _frame.DEFAULT_BLOCK_S,
+               min_hits: int = 3, cost=None, num_classes: int = 1,
+               block_s: int = _frame.DEFAULT_BLOCK_S,
                mode: str = "auto", assoc: str = "greedy"):
     """Whole-chunk fused serving step: F frames in ONE dispatch
     (DESIGN.md §9) — the chunk-granularity sibling of :func:`frame_step`.
@@ -178,24 +195,29 @@ def chunk_step(state, det, det_mask, active, reset, *,
     if mode == "auto":
         mode = "pallas" if _on_tpu() else "ref"
     kw = dict(iou_threshold=iou_threshold, max_age=max_age,
-              min_hits=min_hits)
+              min_hits=min_hits, cost=cost, num_classes=num_classes)
     if mode == "ref":
         return ref.chunk_lane(state, det, det_mask, active, reset,
+                              det_class=det_class, det_embed=det_embed,
                               assoc=assoc, **kw)
     t2d_pre = None
     if assoc == "hungarian":
         _, pre = ref.chunk_lane(state, det, det_mask, active, reset,
+                                det_class=det_class, det_embed=det_embed,
                                 assoc="hungarian", **kw)
         t2d_pre = pre.trk_to_det
     new_state, outs = _chunk.fused_chunk(
-        state, det, det_mask, active, reset, t2d_pre, assoc=assoc,
+        state, det, det_mask, active, reset, t2d_pre,
+        det_class=det_class, det_embed=det_embed, assoc=assoc,
         block_s=block_s, interpret=(mode == "interpret"), **kw)
     return new_state, outs._replace(emit=outs.emit > 0,
                                     matched_det=outs.matched_det > 0)
 
 
-def _hungarian_stage(x, det, det_mask, alive, stream_active,
-                     iou_threshold: float):
+def _hungarian_stage(x, p, det, det_mask, alive, stream_active,
+                     iou_threshold: float, det_class=None, trk_cls=None,
+                     det_embed=None, trk_embed=None, cost=None,
+                     num_classes: int = 1):
     """The fused path's lane-batched JV association stage (DESIGN.md §6).
 
     Recomputes the predicted means (7 rows of adds — free next to the
@@ -204,15 +226,34 @@ def _hungarian_stage(x, det, det_mask, alive, stream_active,
     with ``core.association.associate_lane``.  Pure jnp, so under jit it
     fuses into the same device program as the ``pallas_call`` that
     consumes its output: no host round-trip between solve and update.
+
+    A Mahalanobis-gated ``cost`` additionally needs the predicted
+    covariance's 4x4 block: ``ref.predict_cov4_lane`` recomputes it from
+    the pre-predict ``p`` with the exact accumulation order of the
+    in-kernel predict, so the gate decides on the same floats the kernel
+    would see (the dispatch-mode bit-parity contract).
     """
+    from repro.core import cost as cost_mod
     from repro.core.association import associate_lane
 
     dm = det_mask > 0
     if stream_active is not None:
         dm = dm & (stream_active > 0)
-    trk_boxes = ref.z_to_xyxy_lane(ref.predict_mean_lane(x)[:4])  # [T, 4, S]
+    x_pred = ref.predict_mean_lane(x)                             # [7, T, S]
+    trk_boxes = ref.z_to_xyxy_lane(x_pred[:4])                    # [T, 4, S]
     iou = ref.iou_lane(det, trk_boxes)                            # [D, T, S]
-    t2d, _ = associate_lane(iou, dm, alive > 0, iou_threshold)
+    score = feasible = None
+    if cost is not None and (cost_mod.needs_score(cost)
+                             or cost_mod.needs_feasible(cost, num_classes)):
+        score, feasible = cost_mod.score_and_feasible_lane(
+            iou, cost, num_classes=num_classes,
+            det_class=det_class, trk_cls=trk_cls,
+            det_embed=det_embed, trk_embed=trk_embed,
+            z_det=ref.xyxy_to_z_lane(det) if cost.uses_maha else None,
+            x_pred=x_pred,
+            p4_pred=ref.predict_cov4_lane(p) if cost.uses_maha else None)
+    t2d, _ = associate_lane(iou, dm, alive > 0, iou_threshold,
+                            score=score, feasible=feasible)
     return t2d
 
 

@@ -58,6 +58,33 @@ def predict_lane(x: jnp.ndarray, p: jnp.ndarray):
     return x_new, jnp.stack(rows, axis=0)
 
 
+def predict_cov4_lane(p: jnp.ndarray):
+    """Top-left 4x4 block of the *predicted* covariance, from the
+    pre-predict ``p [49, ...]`` — as nested ``[[...]]`` lists of lane
+    arrays (the form ``core.cost`` consumes for the Mahalanobis gate).
+
+    This is :func:`predict_lane`'s ``fp`` recurrence restricted to
+    ``i, j < 4``, with the identical accumulation order, so each entry is
+    bit-identical to row ``_idx(i, j)`` of the predicted covariance.  The
+    fused-Hungarian pre-pass (``kernels/ops.py``) uses it to evaluate the
+    gate *outside* the kernel on exactly the floats the in-kernel
+    ``frame_lane`` path sees post-predict — the dispatch-mode bit-parity
+    contract of ``tests/test_oracle_parity.py``.
+    """
+    def fp(i, j):
+        v = p[_idx(i, j)]
+        if i < 3:
+            v = v + p[_idx(i + 4, j)]
+        if j < 3:
+            v = v + p[_idx(i, j + 4)]
+        if i < 3 and j < 3:
+            v = v + p[_idx(i + 4, j + 4)]
+        return v
+
+    return [[fp(i, j) + (Q_DIAG[i] if i == j else 0.0) for j in range(4)]
+            for i in range(4)]
+
+
 def _inv2(m00, m01, m10, m11):
     det = m00 * m11 - m01 * m10
     inv = 1.0 / det
@@ -165,7 +192,12 @@ def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
                iou_threshold: float = 0.3,
                active: jnp.ndarray | None = None,
                assoc: str = "greedy",
-               trk_to_det: jnp.ndarray | None = None):
+               trk_to_det: jnp.ndarray | None = None,
+               det_class: jnp.ndarray | None = None,
+               trk_cls: jnp.ndarray | None = None,
+               det_embed: jnp.ndarray | None = None,
+               trk_embed: jnp.ndarray | None = None,
+               cost=None, num_classes: int = 1):
     """One whole SORT frame (predict -> IoU -> assign -> masked update) as
     pure lane-layout vector algebra — the oracle for the single-dispatch
     ``kernels.frame.fused_frame`` Pallas kernel.
@@ -191,6 +223,15 @@ def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
     kernel (data-dependent augmenting paths don't vectorize over lanes)
     while predict and update stay resident.
 
+    ``cost`` (a ``core.cost.CostSpec``) + ``num_classes`` activate the
+    pluggable association cost (DESIGN.md §10) with its lane-major
+    operands: ``det_class [D, S]`` / ``trk_cls [T, S]`` int32 for the
+    class partition, ``det_embed [D, E, S]`` / ``trk_embed [E, T, S]``
+    for the appearance term.  Score/feasibility are evaluated on the
+    *post-predict* state, then feed the same association entry points —
+    ``cost=None`` (or the pure-IoU single-class spec) leaves every solver
+    argument byte-identical to the pre-cost path.
+
     Returns ``(x, p, trk_to_det [T, S] int32, matched_det [D, S] bool)``.
     Tracker lifecycle (tick/birth) stays outside: it is integer bookkeeping
     off the covariance hot path.
@@ -211,13 +252,28 @@ def frame_lane(x: jnp.ndarray, p: jnp.ndarray, det: jnp.ndarray,
     else:
         trk_boxes = z_to_xyxy_lane(x[:4])                   # [T, 4, S]
         iou = iou_lane(det, trk_boxes)                      # [D, T, S]
+        score = feasible = None
+        if cost is not None:
+            from repro.core import cost as cost_mod
+            if (cost_mod.needs_score(cost)
+                    or cost_mod.needs_feasible(cost, num_classes)):
+                p4 = ([[p[_idx(i, j)] for j in range(4)] for i in range(4)]
+                      if cost.uses_maha else None)
+                score, feasible = cost_mod.score_and_feasible_lane(
+                    iou, cost, num_classes=num_classes,
+                    det_class=det_class, trk_cls=trk_cls,
+                    det_embed=det_embed, trk_embed=trk_embed,
+                    z_det=xyxy_to_z_lane(det) if cost.uses_maha else None,
+                    x_pred=x, p4_pred=p4)
         if assoc == "hungarian":
             from repro.core.association import associate_lane
             trk_to_det, matched_det = associate_lane(
-                iou, det_mask, alive, iou_threshold)
+                iou, det_mask, alive, iou_threshold,
+                score=score, feasible=feasible)
         elif assoc == "greedy":
             trk_to_det, matched_det = greedy_assign_lane(
-                iou, det_mask, alive, iou_threshold)
+                iou, det_mask, alive, iou_threshold,
+                score=score, feasible=feasible)
         else:
             raise ValueError(f"unknown assoc {assoc!r}")
     # gather each matched tracker's observation via one-hot contraction
@@ -255,6 +311,12 @@ class ChunkState(NamedTuple):
     unit sublane axis: ``x [7, T, S]``, ``p [49, T, S]``, slot fields
     ``[T, S]``, ``next_uid``/``frame_count`` ``[1, S]``.
     ``core.sort.chunk_state_of`` / ``lane_state_of_chunk`` convert exactly.
+
+    ``embed`` is the per-track appearance embedding (DESIGN.md §10),
+    ``[E, T, S]`` with ``E = cost.embed_dim`` — a zero-size ``[0, T, S]``
+    array when the cost has no appearance term.  It sits *last* so the
+    megakernel can drop it from the Pallas operand list when unused
+    (``kernels/chunk.py``) without renumbering the other state blocks.
     """
 
     x: jnp.ndarray                  # [7, T, S]  Kalman means
@@ -265,8 +327,10 @@ class ChunkState(NamedTuple):
     hit_streak: jnp.ndarray         # [T, S] int32
     time_since_update: jnp.ndarray  # [T, S] int32
     uid: jnp.ndarray                # [T, S] int32, -1 when dead
+    cls: jnp.ndarray                # [T, S] int32 class, -1 when dead
     next_uid: jnp.ndarray           # [1, S] int32
     frame_count: jnp.ndarray        # [1, S] int32
+    embed: jnp.ndarray              # [E, T, S] appearance embeddings
 
 
 class ChunkOuts(NamedTuple):
@@ -278,6 +342,7 @@ class ChunkOuts(NamedTuple):
     emit: jnp.ndarray         # [T, S] bool (int32 across the kernel ABI)
     trk_to_det: jnp.ndarray   # [T, S] int32
     matched_det: jnp.ndarray  # [D, S] bool (int32 across the kernel ABI)
+    cls: jnp.ndarray          # [T, S] int32 track class, -1 when dead
 
 
 def assign_slots_lane_unrolled(free_mask: jnp.ndarray,
@@ -316,9 +381,12 @@ def assign_slots_lane_unrolled(free_mask: jnp.ndarray,
 def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
                     det_mask: jnp.ndarray, active: jnp.ndarray,
                     reset: jnp.ndarray,
-                    trk_to_det: Optional[jnp.ndarray] = None, *,
+                    trk_to_det: Optional[jnp.ndarray] = None,
+                    det_class: Optional[jnp.ndarray] = None,
+                    det_embed: Optional[jnp.ndarray] = None, *,
                     iou_threshold: float = 0.3, max_age: int = 1,
-                    min_hits: int = 3, assoc: str = "greedy"):
+                    min_hits: int = 3, assoc: str = "greedy",
+                    cost=None, num_classes: int = 1):
     """One serving step of the chunk-resident body (DESIGN.md §9).
 
     Replicates, op for op, what the serving scan runs per frame —
@@ -333,6 +401,13 @@ def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
     ``active [1, S]`` 0/1 in state dtype, ``reset [1, S]`` 0/1 numeric;
     ``trk_to_det [T, S] int32`` (optional) is the precomputed association
     for the fused-Hungarian path (see :func:`frame_lane`).
+    ``det_class [D, S] int32`` / ``det_embed [D, E, S]`` (optional) are
+    the pluggable-cost operands (DESIGN.md §10); with a multi-term
+    ``cost`` / ``num_classes`` they feed the in-step score/gate, stamp
+    births (class, embedding) and refresh matched tracks' embeddings —
+    in the *same unrolled per-detection order* as the per-frame engine
+    path (``core.sort.SortEngine.lane_step``), keeping chunk vs frame
+    dispatch bit-identical.
     Returns ``(ChunkState, ChunkOuts)``.
     """
     from repro.core import kalman, slots
@@ -353,6 +428,10 @@ def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
     x = jnp.where(rst[None, None], jnp.zeros((), dt), state.x)
     p = jnp.stack([jnp.where(rst[None], v, state.p[i])
                    for i, v in enumerate(p0)], axis=0)
+    e = state.embed.shape[0]
+    emb = state.embed
+    if e > 0:
+        emb = jnp.where(rst[None, None], jnp.zeros((), dt), emb)
     zero = jnp.zeros((), jnp.int32)
     alive0 = (state.alive > 0) & ~rst[None]
     pool0 = slots.SlotPool(
@@ -363,6 +442,7 @@ def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
         time_since_update=jnp.where(rst[None], zero,
                                     state.time_since_update),
         uid=jnp.where(rst[None], -1, state.uid),
+        cls=jnp.where(rst[None], -1, state.cls),
         next_uid=jnp.where(rst, 1, state.next_uid[0]),       # [S]
     )
     fc0 = jnp.where(rst, zero, state.frame_count[0])         # [S]
@@ -371,7 +451,10 @@ def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
     # the per-frame kernel runs (inactive lanes restored inside)
     x, p, t2d, matched = frame_lane(
         x, p, det, det_mask, alive0.astype(dt), iou_threshold,
-        active=active, assoc=assoc, trk_to_det=trk_to_det)
+        active=active, assoc=assoc, trk_to_det=trk_to_det,
+        det_class=det_class, trk_cls=pool0.cls,
+        det_embed=det_embed, trk_embed=emb,
+        cost=cost, num_classes=num_classes)
 
     # 4a. age & kill (elementwise)
     pool = slots.tick(pool0, t2d >= 0, max_age)
@@ -387,18 +470,22 @@ def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
     for di in range(d):
         born_order.append(n_born)
         n_born = n_born + claimed[di].astype(jnp.int32)
-    born_rows, uid_rows, zb_rows = [], [], []
+    born_rows, uid_rows, cls_rows, zb_rows = [], [], [], []
     for ti in range(t):
         sel_any = jnp.zeros(slot_for.shape[1:], bool)
         uid_t = pool.uid[ti]
+        cls_t = pool.cls[ti]
         zb_t = jnp.zeros((4,) + slot_for.shape[1:], dt)
         for di in range(d):
             sel = slot_for[di] == ti      # claimed slots are distinct
             sel_any = sel_any | sel
             uid_t = jnp.where(sel, pool.next_uid + born_order[di], uid_t)
+            cls_t = jnp.where(
+                sel, zero if det_class is None else det_class[di], cls_t)
             zb_t = jnp.where(sel[None], z_det[:, di], zb_t)
         born_rows.append(sel_any)
         uid_rows.append(uid_t)
+        cls_rows.append(cls_t)
         zb_rows.append(zb_t)
     born = jnp.stack(born_rows, axis=0)                      # [T, S]
     zb = jnp.stack(zb_rows, axis=1)                          # [4, T, S]
@@ -409,12 +496,26 @@ def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
         hit_streak=jnp.where(born, zero, pool.hit_streak),
         time_since_update=jnp.where(born, zero, pool.time_since_update),
         uid=jnp.stack(uid_rows, axis=0),
+        cls=jnp.stack(cls_rows, axis=0),
         next_uid=pool.next_uid + n_born,
     )
     x_init = jnp.concatenate([zb, jnp.zeros((3,) + zb.shape[1:], dt)], 0)
     x = jnp.where(born[None], x_init, x)
     p = jnp.stack([jnp.where(born, v, p[i]) for i, v in enumerate(p0)],
                   axis=0)
+
+    # embedding refresh: matched tracks take their matched detection's
+    # embedding (replace), born tracks their claiming detection's — the
+    # same unrolled per-detection loop order as the per-frame engine path
+    # (`SortEngine.lane_step`), for chunk-vs-frame bit parity.
+    if e > 0 and det_embed is not None:
+        ti_iota = jnp.arange(t, dtype=jnp.int32)[:, None]    # [T, 1]
+        for di in range(d):
+            m_sel = (t2d == di)[None]                        # [1, T, S]
+            emb = jnp.where(m_sel, det_embed[di][:, None], emb)
+        for di in range(d):
+            b_sel = (slot_for[di][None, :] == ti_iota)[None]  # [1, T, S]
+            emb = jnp.where(b_sel, det_embed[di][:, None], emb)
 
     # inactive lanes: lifecycle freezes (x/p were restored inside
     # frame_lane; births can't fire — `unmatched` was gated by act)
@@ -429,6 +530,7 @@ def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
         time_since_update=sel(pool.time_since_update,
                               pool0.time_since_update),
         uid=sel(pool.uid, pool0.uid),
+        cls=sel(pool.cls, pool0.cls),
         next_uid=jnp.where(act, pool.next_uid, pool0.next_uid),
     )
     fc = fc0 + act.astype(jnp.int32)                         # [S]
@@ -441,37 +543,44 @@ def step_chunk_lane(state: ChunkState, det: jnp.ndarray,
         x=x, p=p, alive=pool.alive.astype(jnp.int32), age=pool.age,
         hits=pool.hits, hit_streak=pool.hit_streak,
         time_since_update=pool.time_since_update, uid=pool.uid,
-        next_uid=pool.next_uid[None, :], frame_count=fc[None, :])
+        cls=pool.cls,
+        next_uid=pool.next_uid[None, :], frame_count=fc[None, :],
+        embed=emb)
     outs = ChunkOuts(boxes=z_to_xyxy_lane(x[:4]), uid=pool.uid, emit=emit,
-                     trk_to_det=t2d, matched_det=matched)
+                     trk_to_det=t2d, matched_det=matched, cls=pool.cls)
     return new_state, outs
 
 
 def chunk_lane(state: ChunkState, det: jnp.ndarray, det_mask: jnp.ndarray,
                active: jnp.ndarray, reset: jnp.ndarray,
-               trk_to_det: Optional[jnp.ndarray] = None, *,
+               trk_to_det: Optional[jnp.ndarray] = None,
+               det_class: Optional[jnp.ndarray] = None,
+               det_embed: Optional[jnp.ndarray] = None, *,
                iou_threshold: float = 0.3, max_age: int = 1,
-               min_hits: int = 3, assoc: str = "greedy"):
+               min_hits: int = 3, assoc: str = "greedy",
+               cost=None, num_classes: int = 1):
     """Chunk-level oracle: scan :func:`step_chunk_lane` over the frame
     axis — the ground truth for ``kernels.chunk.fused_chunk`` and the
     non-TPU execution path of ``kernels.ops.chunk_step``.
 
     ``det [F, D, 4, S]``, ``det_mask [F, D, S]``, ``active``/``reset``
-    ``[F, 1, S]``, optional ``trk_to_det [F, T, S] int32``.  Returns
+    ``[F, 1, S]``, optional ``trk_to_det [F, T, S] int32``,
+    ``det_class [F, D, S] int32``, ``det_embed [F, D, E, S]``.  Returns
     ``(ChunkState, ChunkOuts stacked over F)``.
     """
-    def body(st, inp):
-        t2 = None
-        if trk_to_det is None:
-            d_, m_, a_, r_ = inp
-        else:
-            d_, m_, a_, r_, t2 = inp
-        return step_chunk_lane(st, d_, m_, a_, r_, t2,
-                               iou_threshold=iou_threshold, max_age=max_age,
-                               min_hits=min_hits, assoc=assoc)
+    present = [a is not None for a in (trk_to_det, det_class, det_embed)]
 
-    xs = ((det, det_mask, active, reset) if trk_to_det is None
-          else (det, det_mask, active, reset, trk_to_det))
+    def body(st, inp):
+        d_, m_, a_, r_ = inp[:4]
+        it = iter(inp[4:])
+        t2, dc, de = (next(it) if has else None for has in present)
+        return step_chunk_lane(st, d_, m_, a_, r_, t2, dc, de,
+                               iou_threshold=iou_threshold, max_age=max_age,
+                               min_hits=min_hits, assoc=assoc,
+                               cost=cost, num_classes=num_classes)
+
+    xs = (det, det_mask, active, reset) + tuple(
+        a for a in (trk_to_det, det_class, det_embed) if a is not None)
     return jax.lax.scan(body, state, xs)
 
 

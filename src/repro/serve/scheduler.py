@@ -89,9 +89,12 @@ class _Seq:
     name: str
     det_boxes: np.ndarray          # [F, D, 4] padded to the scheduler's D
     det_mask: np.ndarray           # [F, D]
+    det_class: Optional[np.ndarray] = None   # [F, D] int32 (multi-class)
+    det_embed: Optional[np.ndarray] = None   # [F, D, E] (embed costs)
     boxes: list = dataclasses.field(default_factory=list)
     uid: list = dataclasses.field(default_factory=list)
     emit: list = dataclasses.field(default_factory=list)
+    cls: list = dataclasses.field(default_factory=list)
 
     @property
     def length(self) -> int:
@@ -183,6 +186,16 @@ class StreamScheduler:
         self.mesh = mesh
         self.shrink_patience = shrink_patience
 
+        # class/embed operand threading (DESIGN.md §10): required exactly
+        # when the engine's cost/partition config consumes them, so the
+        # single-class IoU scheduler plans and dispatches byte-identical
+        # chunks to the pre-multiclass code.
+        self._need_class = engine.config.num_classes > 1
+        self._need_embed = engine.config.cost.uses_embed
+        self._embed_dim = engine.config.cost.embed_dim
+        self._extra_ndims = ((3,) if self._need_class else ()) + \
+                            ((4,) if self._need_embed else ())
+
         self._pending: collections.deque[_Seq] = collections.deque()
         self._occupant: list[Optional[_Seq]] = [None] * num_lanes
         self._cursor = [0] * num_lanes
@@ -209,7 +222,9 @@ class StreamScheduler:
         # grow/shrink cycles must never retrace a compiled ladder width.
         self.trace_log: list[int] = []
 
-        def chunk_fn(state, det, dm, active, reset):
+        need_class, need_embed = self._need_class, self._need_embed
+
+        def chunk_fn(state, det, dm, active, reset, *extras):
             self.trace_log.append(det.shape[1])    # runs at trace time only
             # F serving steps in one call: a per-frame jitted scan, or —
             # with SortConfig.chunk_kernel — ONE chunk-resident pallas_call
@@ -217,8 +232,12 @@ class StreamScheduler:
             # accounting, trace_log, the elastic ladder, sharding) is
             # identical under both dispatch modes: the granularity change
             # lives entirely inside the engine call.
+            it = iter(extras)
+            dc = next(it) if need_class else None
+            de = next(it) if need_embed else None
             return self.engine.run_chunk_ragged(state, det, dm, active,
-                                                reset)
+                                                reset, det_class=dc,
+                                                det_embed=de)
 
         if mesh is None:
             self._sharding = None
@@ -244,16 +263,21 @@ class StreamScheduler:
             self._shardings: dict[int, LaneSharding] = {}
             self._sharding = self._sharding_for(num_lanes)
             self._state = self._sharding.init()
-            self._chunk_fn = jax.jit(self._sharding.shard_chunk(chunk_fn))
+            self._chunk_fn = jax.jit(self._sharding.shard_chunk(
+                chunk_fn, extra_operand_ndims=self._extra_ndims))
         if self.elastic and precompile:
             self._precompile_ladder()
 
     # --------------------------------------------------------------- intake
     def submit(self, name: str, det_boxes: np.ndarray,
-               det_mask: np.ndarray) -> int:
+               det_mask: np.ndarray, det_class: Optional[np.ndarray] = None,
+               det_embed: Optional[np.ndarray] = None) -> int:
         """Queue one sequence (``det_boxes [F, D_i, 4]``, ``det_mask
         [F, D_i]``); returns its submission index.  ``D_i`` must not exceed
-        the scheduler's detection budget."""
+        the scheduler's detection budget.  ``det_class [F, D_i]`` int /
+        ``det_embed [F, D_i, E]`` are required exactly when the engine's
+        config partitions classes / composes an embedding cost
+        (DESIGN.md §10), and ignored otherwise."""
         det_boxes = np.asarray(det_boxes, np.float32)
         det_mask = np.asarray(det_mask, bool)
         f, d_i = det_mask.shape
@@ -261,11 +285,26 @@ class StreamScheduler:
             raise ValueError(
                 f"sequence {name!r} has {d_i} detection slots, scheduler "
                 f"budget is {self.max_dets}")
+        if self._need_class and det_class is None:
+            raise ValueError(
+                f"sequence {name!r}: det_class is required when "
+                f"num_classes={self.engine.config.num_classes} > 1")
+        if self._need_embed and det_embed is None:
+            raise ValueError(
+                f"sequence {name!r}: det_embed is required when the cost "
+                f"has an embedding term ({self.engine.config.cost})")
+        dc = (np.asarray(det_class, np.int32) if self._need_class else None)
+        de = (np.asarray(det_embed, np.float32) if self._need_embed else None)
         if d_i < self.max_dets:
             pad = self.max_dets - d_i
             det_boxes = np.pad(det_boxes, ((0, 0), (0, pad), (0, 0)))
             det_mask = np.pad(det_mask, ((0, 0), (0, pad)))
-        seq = _Seq(self._num_submitted, name, det_boxes, det_mask)
+            if dc is not None:
+                dc = np.pad(dc, ((0, 0), (0, pad)))
+            if de is not None:
+                de = np.pad(de, ((0, 0), (0, pad), (0, 0)))
+        seq = _Seq(self._num_submitted, name, det_boxes, det_mask,
+                   det_class=dc, det_embed=de)
         self._num_submitted += 1
         if f == 0:  # nothing to step; complete immediately (still in order)
             self._finalize(seq)
@@ -321,16 +360,27 @@ class StreamScheduler:
             det = np.zeros((c, w, d, 4), np.float32)
             dm = np.zeros((c, w, d), bool)
             idle = np.zeros((c, w), bool)
+            extras = self._zero_extras(c, w, d)
             if self._sharding is not None:
                 sh = self._sharding_for(w)
                 state = self._state if w == self.num_lanes else sh.init()
-                operands = sh.place(det, dm, idle, idle)
+                operands = sh.place(det, dm, idle, idle, *extras)
             else:
                 state = (self._state if w == self.num_lanes
                          else self.engine.init_ragged(w))
                 operands = tuple(jnp.asarray(a)
-                                 for a in (det, dm, idle, idle))
+                                 for a in (det, dm, idle, idle) + extras)
             self._chunk_fn(state, *operands)
+
+    def _zero_extras(self, c: int, l: int, d: int) -> tuple:
+        """All-zero class/embed chunk operands in dispatch order (class
+        first), matching ``_extra_ndims``."""
+        extras = ()
+        if self._need_class:
+            extras += (np.zeros((c, l, d), np.int32),)
+        if self._need_embed:
+            extras += (np.zeros((c, l, d, self._embed_dim), np.float32),)
+        return extras
 
     def request_width(self, width: Optional[int]) -> None:
         """Pin the budget to ``width`` (a ladder width), overriding the
@@ -434,6 +484,10 @@ class StreamScheduler:
         dm = np.zeros((c, l, d), bool)
         active = np.zeros((c, l), bool)
         reset = np.zeros((c, l), bool)
+        extras = self._zero_extras(c, l, d)
+        it = iter(extras)
+        dc = next(it) if self._need_class else None
+        de = next(it) if self._need_embed else None
         mapping = []                                  # (t, lane, seq, frame)
         for t in range(c):
             for lane in range(l):
@@ -451,12 +505,16 @@ class StreamScheduler:
                 k = self._cursor[lane]
                 det[t, lane] = seq.det_boxes[k]
                 dm[t, lane] = seq.det_mask[k]
+                if dc is not None:
+                    dc[t, lane] = seq.det_class[k]
+                if de is not None:
+                    de[t, lane] = seq.det_embed[k]
                 active[t, lane] = True
                 mapping.append((t, lane, seq, k))
                 self._cursor[lane] = k + 1
                 if k + 1 == seq.length:               # lane free next step
                     self._occupant[lane] = None
-        return det, dm, active, reset, mapping
+        return det, dm, active, reset, extras, mapping
 
     # ------------------------------------------------------------ execution
     def _run_chunk(self) -> list[SequenceTracks]:
@@ -464,17 +522,18 @@ class StreamScheduler:
             # nothing to dispatch — only buffered completions to release
             return self._ready.pop_ready()
         self._maybe_resize()
-        det, dm, active, reset, mapping = self._plan_chunk()
+        det, dm, active, reset, extras, mapping = self._plan_chunk()
         if self._sharding is not None:
-            operands = self._sharding.place(det, dm, active, reset)
+            operands = self._sharding.place(det, dm, active, reset, *extras)
         else:
-            operands = (jnp.asarray(det), jnp.asarray(dm),
-                        jnp.asarray(active), jnp.asarray(reset))
+            operands = tuple(jnp.asarray(a)
+                             for a in (det, dm, active, reset) + extras)
         self._state, outs = self._chunk_fn(self._state, *operands)
         self._check_uid_headroom()
         boxes = np.asarray(outs.boxes)                # [C, L, T, 4]
         uid = np.asarray(outs.uid)
         emit = np.asarray(outs.emit)
+        cls = np.asarray(outs.cls) if self._need_class else None
         finished = []
         for t, lane, seq, k in mapping:
             # copies, so buffering a row doesn't pin the whole chunk array
@@ -482,6 +541,8 @@ class StreamScheduler:
             seq.boxes.append(boxes[t, lane].copy())
             seq.uid.append(uid[t, lane].copy())
             seq.emit.append(emit[t, lane].copy())
+            if cls is not None:
+                seq.cls.append(cls[t, lane].copy())
             if k + 1 == seq.length:
                 finished.append(seq)
         self.frames_processed += len(mapping)
@@ -503,6 +564,9 @@ class StreamScheduler:
                  else np.zeros((0, t), np.int32)),
             emit=(np.stack(seq.emit) if seq.emit
                   else np.zeros((0, t), bool)),
+            cls=((np.stack(seq.cls) if seq.cls
+                  else np.zeros((0, t), np.int32))
+                 if self._need_class else None),
         ))
 
     def _check_uid_headroom(self) -> None:

@@ -97,26 +97,33 @@ class MeshLaneState(NamedTuple):
     p: jnp.ndarray            # [49, T, L]
     pool: slots.SlotPool      # [T, L] (+ next_uid [L])
     frame_count: jnp.ndarray  # [L]
+    # [E, T, L] appearance embeddings (zero-size when the cost has no
+    # embed term, DESIGN.md §10); lane axis last like every other leaf
+    embed: jnp.ndarray = None
 
 
 def mesh_view(lane: LaneSortState) -> MeshLaneState:
     """Flat lane state -> 3-D mesh view (free row-major reshape)."""
     t, sp = lane.pool.alive.shape
+    e = lane.embed.shape[0]
     return MeshLaneState(
         x=lane.x.reshape(kalman.DIM_X, t, sp),
         p=lane.p.reshape(49, t, sp),
         pool=lane.pool,
-        frame_count=lane.frame_count)
+        frame_count=lane.frame_count,
+        embed=lane.embed.reshape(e, t, sp))
 
 
 def lane_view(mesh_state: MeshLaneState) -> LaneSortState:
     """3-D mesh view -> flat lane state (the engine's resident layout)."""
     t, sp = mesh_state.pool.alive.shape
+    e = mesh_state.embed.shape[0]
     return LaneSortState(
         x=mesh_state.x.reshape(kalman.DIM_X, t * sp),
         p=mesh_state.p.reshape(49, t * sp),
         pool=mesh_state.pool,
-        frame_count=mesh_state.frame_count)
+        frame_count=mesh_state.frame_count,
+        embed=mesh_state.embed.reshape(e, t * sp))
 
 
 def state_pspecs(state):
@@ -193,33 +200,39 @@ class LaneSharding:
         return jax.device_put(state, named(self._state_specs, self.mesh))
 
     # ------------------------------------------------------------ chunk fn
-    def shard_chunk(self, chunk_body):
+    def shard_chunk(self, chunk_body, extra_operand_ndims=()):
         """Wrap the scheduler's chunk scan in ``shard_map``.
 
-        ``chunk_body(state, det, dm, active, reset) -> (state, outs)`` is
-        the unsharded scan (masked re-init + ``step_ragged`` per step); it
-        runs unchanged on each device's local lane shard.  On the fused
-        path the carried state crosses the boundary in its 3-D mesh view
-        and reshapes to the flat local lane layout inside — both reshapes
-        are free.  No collective appears anywhere in the body, so the
-        compiled program is N independent per-device scans.
+        ``chunk_body(state, det, dm, active, reset, *extras) -> (state,
+        outs)`` is the unsharded scan (masked re-init + ``step_ragged`` per
+        step); it runs unchanged on each device's local lane shard.
+        ``extra_operand_ndims`` declares the rank of each trailing operand
+        (e.g. ``det_class [C, L, D]`` -> 3, ``det_embed [C, L, D, E]`` ->
+        4); like every chunk operand they carry the lane axis on dim 1, so
+        the class/embed threading stays collective-free (DESIGN.md §10).
+        On the fused path the carried state crosses the boundary in its 3-D
+        mesh view and reshapes to the flat local lane layout inside — both
+        reshapes are free.  No collective appears anywhere in the body, so
+        the compiled program is N independent per-device scans.
         """
         if self._state_specs is None:
             raise RuntimeError("call init() before shard_chunk()")
         fused = self._fused
 
-        def local_chunk(state, det, dm, active, reset):
+        def local_chunk(state, det, dm, active, reset, *extras):
             st = lane_view(state) if fused else state
-            st, outs = chunk_body(st, det, dm, active, reset)
+            st, outs = chunk_body(st, det, dm, active, reset, *extras)
             return (mesh_view(st) if fused else st), outs
 
         out_specs = (self._state_specs,
                      SortOutput(boxes=_chunk_spec(4), uid=_chunk_spec(3),
-                                emit=_chunk_spec(3), matched_det=_chunk_spec(3)))
+                                emit=_chunk_spec(3), matched_det=_chunk_spec(3),
+                                cls=_chunk_spec(3)))
         return compat.shard_map(
             local_chunk, self.mesh,
             in_specs=(self._state_specs, _chunk_spec(4), _chunk_spec(3),
-                      _chunk_spec(2), _chunk_spec(2)),
+                      _chunk_spec(2), _chunk_spec(2))
+                     + tuple(_chunk_spec(n) for n in extra_operand_ndims),
             out_specs=out_specs,
             check_vma=False)
 
@@ -285,14 +298,16 @@ class LaneSharding:
                               named(new_sharding._state_specs, self.mesh))
 
     # ----------------------------------------------------------- placement
-    def place(self, det, dm, active, reset):
+    def place(self, det, dm, active, reset, *extras):
         """Host chunk operands -> device, already lane-sharded.
 
         ``device_put`` with the matching ``NamedSharding`` scatters each
         host array straight to its owning devices, so the jitted chunk
         consumes committed shardings and never inserts a resharding copy.
+        Trailing ``extras`` (``det_class`` / ``det_embed``) are placed by
+        the same lane-on-dim-1 rule.
         """
-        arrs = (det, dm, active, reset)
+        arrs = (det, dm, active, reset) + extras
         return tuple(
             jax.device_put(np.asarray(a),
                            NamedSharding(self.mesh, _chunk_spec(a.ndim)))

@@ -222,3 +222,89 @@ def test_mot15_min_conf_filters_everything(tmp_path):
     txt = "1,-1,10,10,20,20,0.1,-1,-1,-1\n2,-1,5,5,10,10,0.2,-1,-1,-1\n"
     rb, rm = mot.read_det_file(io.StringIO(txt), min_conf=0.5)
     assert rb.shape == (0, 1, 4) and rm.shape == (0, 1)
+
+
+# ------------------------------------- class / conf columns (DESIGN.md §10)
+def test_mot15_class_conf_columns_roundtrip(tmp_path):
+    """write_det_file(det_class=, det_conf=) -> read_det_file(with_extras=
+    True) round-trips classes exactly and float32 confidences bit-exactly
+    (``%.9g`` is lossless for float32)."""
+    rng = np.random.default_rng(9)
+    det_boxes = np.round(rng.uniform(0, 400, (5, 3, 4)).astype(np.float32), 2)
+    det_boxes[..., 2:] = det_boxes[..., :2] + 10.0
+    det_mask = rng.random((5, 3)) < 0.8
+    det_mask[4, 0] = True                            # keep frame 5 present
+    det_class = rng.integers(0, 7, (5, 3)).astype(np.int32)
+    det_conf = rng.random((5, 3)).astype(np.float32)  # awkward mantissas
+    p = tmp_path / "det.txt"
+    mot.write_det_file(p, det_boxes, det_mask, det_class=det_class,
+                       det_conf=det_conf)
+    rb, rm, rc, rconf = mot.read_det_file(p, with_extras=True)
+    np.testing.assert_array_equal(rm.sum(1), det_mask.sum(1))
+    np.testing.assert_array_equal(rc[rm], det_class[det_mask])
+    np.testing.assert_array_equal(rconf[rm], det_conf[det_mask])  # bit-exact
+
+
+def test_mot15_default_write_is_classless(tmp_path):
+    """Without det_class/det_conf the writer emits the pre-§10 byte layout
+    (conf=1, class=-1) and the extras reader reports class -1 / conf 1."""
+    det_boxes = np.array([[[10.0, 20.0, 40.0, 80.0]]], np.float32)
+    det_mask = np.ones((1, 1), bool)
+    p = tmp_path / "det.txt"
+    mot.write_det_file(p, det_boxes, det_mask)
+    assert p.read_text() == "1,-1,10.00,20.00,30.00,60.00,1,-1,-1,-1\n"
+    rb, rm, rc, rconf = mot.read_det_file(p, with_extras=True)
+    assert int(rc[0, 0]) == -1 and float(rconf[0, 0]) == 1.0
+
+
+def test_mot15_extras_empty_shapes():
+    """with_extras=True keeps the zero-frame contract: (0,1)-shaped class
+    and conf arrays alongside the empty boxes/mask."""
+    for raw in ("", "\n", "1,-1,1,1,2,2,0.1,3,-1,-1\n"):
+        db, dm, dc, dconf = mot.read_det_file(
+            io.StringIO(raw), min_conf=0.5, with_extras=True)
+        assert db.shape == (0, 1, 4) and dm.shape == (0, 1)
+        assert dc.shape == (0, 1) and dc.dtype == np.int32
+        assert dconf.shape == (0, 1) and dconf.dtype == np.float32
+
+
+def test_multiclass_scene_class_stable_and_one_hot():
+    """Generator invariants the parity tests lean on: per-object classes
+    never change along a trajectory, embeddings are one-hot (dot products
+    exactly 0/1), and true detections inherit their object's class."""
+    cfg = synthetic.SceneConfig(num_frames=30, max_objects=5, seed=2,
+                                det_noise=0.0, fp_rate=0.0, miss_rate=0.0)
+    gtb, gtm, gtc, db, dm, dc, de = synthetic.generate_multiclass_scene(
+        cfg, num_classes=3, embed_dim=4)
+    assert gtc.shape == (gtm.shape[1],) and gtc.dtype == np.int32
+    assert (0 <= gtc).all() and (gtc < 3).all()
+    v = de[dm]
+    assert set(np.unique(v)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(v.sum(-1), np.ones(len(v)))  # one-hot
+    # with no noise/misses/FPs every detection is some gt box verbatim:
+    # its class must equal that object's class in every frame
+    for t in range(db.shape[0]):
+        for d in np.where(dm[t])[0]:
+            i = int(np.argmin(np.abs(gtb[t] - db[t, d]).sum(-1)))
+            assert gtm[t, i] and dc[t, d] == gtc[i], (t, d)
+
+
+def test_crossing_scene_geometry():
+    """Objects start on a circle and pass through the center: by
+    mid-sequence some cross-class pair overlaps (the ambiguity the class
+    partition must resolve), classes alternate round-robin, and dropout
+    stays seeded-deterministic."""
+    from repro.core.ref_numpy import iou
+
+    gtb, gtm, cls, db, dm, dc, de = synthetic.generate_crossing_scene(
+        num_frames=41, num_objects=4, num_classes=2)
+    np.testing.assert_array_equal(cls, [0, 1, 0, 1])
+    assert gtm.all() and dm.all()                    # no dropout by default
+    mid = np.array([[iou(a, b) for b in gtb[20]] for a in gtb[20]])
+    cross = cls[:, None] != cls[None, :]
+    assert (mid[cross] > 0.5).any()                  # cross-class overlap
+    a = synthetic.generate_crossing_scene(seed=5, miss_rate=0.3)
+    b = synthetic.generate_crossing_scene(seed=5, miss_rate=0.3)
+    assert 0 < a[4].sum() < a[1].size                # dropout happened
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)          # seeded-deterministic

@@ -21,8 +21,9 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core import SortConfig, SortEngine
-from repro.data.synthetic import SceneConfig, generate_scene
+from repro.core import SortConfig, SortEngine, cost as cost_mod
+from repro.data.synthetic import (SceneConfig, generate_multiclass_scene,
+                                  generate_scene)
 from repro.serve import StreamScheduler
 from repro.sharding import LaneSharding, lane_mesh, state_pspecs
 from repro.sharding.lanes import lane_view, mesh_view
@@ -127,6 +128,90 @@ def test_megakernel_mesh_of_one_matches_unsharded(assoc):
     _, shard = _serve(_engine(True, assoc, chunk_kernel=True), seqs,
                       mesh=lane_mesh(1), num_lanes=2)
     _assert_results_equal(solo, shard)
+
+
+# --------------------------------------- multiclass operands (DESIGN.md §10)
+MC_EMBED = 4
+
+
+def _mc_scene(seed, frames):
+    _, _, _, db, dm, dc, de = generate_multiclass_scene(
+        SceneConfig(num_frames=frames, max_objects=4, seed=seed),
+        num_classes=3, embed_dim=MC_EMBED)
+    d = db.shape[1]
+    assert d <= MAX_DETS, d
+    pad = MAX_DETS - d
+    return (np.pad(db, ((0, 0), (0, pad), (0, 0))),
+            np.pad(dm, ((0, 0), (0, pad))),
+            np.pad(dc, ((0, 0), (0, pad))),
+            np.pad(de, ((0, 0), (0, pad), (0, 0))))
+
+
+def _mc_engine(chunk_kernel=False):
+    return SortEngine(SortConfig(max_trackers=8, max_detections=MAX_DETS,
+                                 use_kernels=True, chunk_kernel=chunk_kernel,
+                                 cost=cost_mod.iou_embed(MC_EMBED),
+                                 num_classes=3))
+
+
+def _serve_mc(eng, seqs, mesh, num_lanes=4, chunk=4):
+    sched = StreamScheduler(eng, num_lanes=num_lanes, chunk=chunk, mesh=mesh)
+    for name, db, dm, dc, de in seqs:
+        sched.submit(name, db, dm, det_class=dc, det_embed=de)
+    return sched, sched.run()
+
+
+def _assert_mc_results_equal(a, b):
+    _assert_results_equal(a, b)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.cls, rb.cls, err_msg=ra.name)
+
+
+@needs_multi
+@pytest.mark.parametrize("chunk_kernel", [False, True])
+def test_sharded_multiclass_bit_identical_to_single_device(chunk_kernel):
+    """The det_class/det_embed extras and the track-class output ride the
+    same lane partitioning as every other chunk operand: a multiclass
+    composed-cost mix (iou+embed, 3 classes) served over a 4-device mesh —
+    including the embedding leaf in the resident state — equals the
+    unsharded run bit for bit, classes included, under both dispatch
+    modes."""
+    seqs = [(f"mc{i}", *_mc_scene(50 + i, f)) for i, f in enumerate(LENGTHS)]
+    _, solo = _serve_mc(_mc_engine(), seqs, mesh=None)
+    _, shard = _serve_mc(_mc_engine(chunk_kernel=chunk_kernel), seqs,
+                         mesh=lane_mesh(4))
+    _assert_mc_results_equal(solo, shard)
+
+
+def test_multiclass_mesh_of_one_matches_unsharded():
+    """Mesh-of-one multiclass serving (extras + cls through shard_map) is
+    the identity — runs in any session."""
+    seqs = [(f"mo{i}", *_mc_scene(70 + i, f)) for i, f in enumerate([6, 3, 8])]
+    _, solo = _serve_mc(_mc_engine(), seqs, mesh=None, num_lanes=2)
+    _, shard = _serve_mc(_mc_engine(), seqs, mesh=lane_mesh(1), num_lanes=2)
+    _assert_mc_results_equal(solo, shard)
+
+
+@needs_multi
+def test_sharded_multiclass_chunk_program_has_no_collectives():
+    """Zero-collective claim survives the extra operands: the lowered
+    multiclass chunk program (class + embed inputs, cls output) contains
+    no cross-device collectives."""
+    c, lanes, d = 3, 4, MAX_DETS
+    sched = StreamScheduler(_mc_engine(), num_lanes=lanes, chunk=c,
+                            mesh=lane_mesh(4))
+    det = np.zeros((c, lanes, d, 4), np.float32)
+    dm = np.zeros((c, lanes, d), bool)
+    active = np.ones((c, lanes), bool)
+    reset = np.zeros((c, lanes), bool)
+    extras = sched._zero_extras(c, lanes, d)
+    lowered = sched._chunk_fn.lower(
+        sched._state,
+        *sched._sharding.place(det, dm, active, reset, *extras))
+    text = lowered.as_text()
+    for op in ("all_reduce", "all_gather", "all_to_all",
+               "collective_permute", "psum", "ppermute"):
+        assert op not in text, f"collective {op} in multiclass chunk program"
 
 
 # ---------------------------------------------------------- mesh plumbing

@@ -364,8 +364,10 @@ def _chunk_operands(seed, f, t, d, s, dt=np.float32):
         hit_streak=jnp.zeros((t, s), jnp.int32),
         time_since_update=jnp.zeros((t, s), jnp.int32),
         uid=jnp.full((t, s), -1, jnp.int32),
+        cls=jnp.full((t, s), -1, jnp.int32),
         next_uid=jnp.ones((1, s), jnp.int32),
         frame_count=jnp.zeros((1, s), jnp.int32),
+        embed=jnp.zeros((0, t, s), dt),
     )
     xy = rng.uniform(0, 200, size=(f, d, 2, s))
     wh = rng.uniform(5, 60, size=(f, d, 2, s))

@@ -23,9 +23,10 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core import SortConfig, SortEngine
+from repro.core import SortConfig, SortEngine, cost as cost_mod
 from repro.core.ref_numpy import Sort as RefSort
-from repro.data.synthetic import SceneConfig, generate_scene
+from repro.data.synthetic import (SceneConfig, generate_crossing_scene,
+                                  generate_multiclass_scene, generate_scene)
 
 NUM_FRAMES = 45  # fixed so every hypothesis example reuses the jit cache
 PATHS = [(False, "hungarian"), (False, "greedy"),
@@ -192,3 +193,197 @@ def test_oracle_parity_property(use_kernels, assoc, seed, max_objects):
     ref_frames = _run_ref(db, dm, assoc)
     _assert_identical_streams(out, ref_frames,
                               f"(uk={use_kernels} assoc={assoc} seed={seed})")
+
+
+# --------------------------------- multiclass / composed costs (DESIGN.md §10)
+# The grid grows by cost mode x class count: the composed score
+# (IoU ⊕ Mahalanobis gate ⊕ embedding) and the class partition must match
+# the extended scipy-backed oracle on every engine path under both
+# association modes, and the megakernel dispatch mode must stay bitwise
+# equal to the per-frame scan with the new operands threaded through.
+
+MC_FRAMES = 30
+MC_EMBED = 4
+COSTS = [("iou", cost_mod.IOU),
+         ("maha", cost_mod.iou_maha()),
+         ("embed", cost_mod.iou_embed(MC_EMBED))]
+_MC_SCENE: dict = {}
+
+
+def _mc_scene():
+    if "scene" not in _MC_SCENE:
+        _MC_SCENE["scene"] = generate_multiclass_scene(
+            SceneConfig(num_frames=MC_FRAMES, max_objects=5, seed=5),
+            num_classes=3, embed_dim=MC_EMBED)
+    return _MC_SCENE["scene"]
+
+
+def _run_engine_mc(db, dm, dc, de, use_kernels, assoc, spec, nc):
+    key = ("mc", db.shape[1], use_kernels, assoc, spec, nc)
+    if key not in _ENGINES:
+        eng = SortEngine(SortConfig(max_trackers=16,
+                                    max_detections=db.shape[1],
+                                    use_kernels=use_kernels, assoc=assoc,
+                                    cost=spec, num_classes=nc))
+        kw_names = (("det_class",) if nc > 1 else ()) + \
+                   (("det_embed",) if spec.uses_embed else ())
+
+        def run_fn(state, b, m, *ops, eng=eng, kw_names=kw_names):
+            return eng.run(state, b, m, **dict(zip(kw_names, ops)))
+
+        _ENGINES[key] = (eng, jax.jit(run_fn), kw_names)
+    eng, run_fn, kw_names = _ENGINES[key]
+    ops = {"det_class": jnp.asarray(dc)[:, None],
+           "det_embed": jnp.asarray(de)[:, None]}
+    _, out = run_fn(eng.init(1), jnp.asarray(db)[:, None],
+                    jnp.asarray(dm)[:, None],
+                    *[ops[n] for n in kw_names])
+    return out
+
+
+def _run_ref_mc(db, dm, dc, de, assoc, spec, nc):
+    """Mirror the engine's operand gating: classes thread only when the
+    config partitions (nc>1), embeds only when the cost consumes them."""
+    ref = RefSort(assoc=assoc, cost=spec, num_classes=nc)
+    return [ref.update(db[t][dm[t]],
+                       dc[t][dm[t]] if nc > 1 else None,
+                       de[t][dm[t]] if spec.uses_embed else None)
+            for t in range(db.shape[0])]
+
+
+def _assert_identical_mc_streams(out, ref_frames, ctx=""):
+    """uid AND class of every emitted track match the oracle per frame."""
+    for t, ref_t in enumerate(ref_frames):
+        em = np.asarray(out.emit[t, 0])
+        uids = np.asarray(out.uid[t, 0])
+        clss = np.asarray(out.cls[t, 0])
+        ours = sorted((int(u), int(c)) for u, c in zip(uids[em], clss[em]))
+        ref = sorted((int(o[4]), int(o[5])) for o in ref_t)
+        assert ours == ref, f"frame {t} {ctx}"
+        boxes_ours = {int(u): np.asarray(out.boxes[t, 0, k])
+                      for k, u in enumerate(uids) if em[k]}
+        for o in ref_t:
+            np.testing.assert_allclose(boxes_ours[int(o[4])], o[:4],
+                                       rtol=1e-3, atol=0.5,
+                                       err_msg=f"frame {t} uid {o[4]} {ctx}")
+
+
+@pytest.mark.parametrize("use_kernels,assoc", PATHS)
+@pytest.mark.parametrize("cost_name,spec", COSTS)
+@pytest.mark.parametrize("nc", [1, 3])
+def test_oracle_parity_multiclass(use_kernels, assoc, cost_name, spec, nc):
+    """path x assoc x cost-mode x {1,3}-classes vs the extended oracle."""
+    if cost_name == "iou" and nc == 1:
+        pytest.skip("exact pre-cost config; covered by the original grid")
+    db_g, dm_g, _, db, dm, dc, de = _mc_scene()
+    del db_g, dm_g
+    out = _run_engine_mc(db, dm, dc, de, use_kernels, assoc, spec, nc)
+    ref_frames = _run_ref_mc(db, dm, dc, de, assoc, spec, nc)
+    _assert_identical_mc_streams(
+        out, ref_frames,
+        f"(uk={use_kernels} assoc={assoc} cost={cost_name} nc={nc})")
+
+
+@pytest.mark.parametrize("assoc", ["greedy", "hungarian"])
+@pytest.mark.parametrize("cost_name,spec", COSTS)
+def test_megakernel_multiclass_bit_identical(assoc, cost_name, spec):
+    """Dispatch-mode leg of the multiclass grid: with det_class/det_embed
+    threaded through the chunk path, the megakernel stays bit-identical to
+    the per-frame scan (state, boxes, uids, classes, embeds)."""
+    nc = 3
+    rng = np.random.default_rng(11)
+
+    def mk(chunk_kernel):
+        return SortEngine(SortConfig(
+            max_trackers=8, max_detections=_CHUNK_DETS, use_kernels=True,
+            assoc=assoc, chunk_kernel=chunk_kernel, cost=spec,
+            num_classes=nc))
+
+    eng_scan, eng_mega = mk(False), mk(True)
+    st_a = eng_scan.init_ragged(_CHUNK_LANES)
+    st_b = eng_mega.init_ragged(_CHUNK_LANES)
+    for chunk_idx in range(2):
+        det, dm, active, reset = _chunk_traffic(200 + chunk_idx, 7)
+        dc = jnp.asarray(rng.integers(
+            0, nc, (7, _CHUNK_LANES, _CHUNK_DETS)).astype(np.int32))
+        de = jnp.asarray(rng.normal(size=(
+            7, _CHUNK_LANES, _CHUNK_DETS, MC_EMBED)).astype(np.float32))
+        kw = {"det_class": dc}
+        if spec.uses_embed:
+            kw["det_embed"] = de
+        st_a, out_a = eng_scan.run_chunk_ragged(st_a, det, dm, active,
+                                                reset, **kw)
+        st_b, out_b = eng_mega.run_chunk_ragged(st_b, det, dm, active,
+                                                reset, **kw)
+        ctx = f"(assoc={assoc} cost={cost_name} chunk={chunk_idx})"
+        _assert_chunk_equal(st_a, st_b, ctx)
+        _assert_chunk_equal(out_a, out_b, ctx)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_cross_class_never_matched(use_kernels):
+    """Crossing-paths regression: all objects pass through the image
+    center mid-sequence (a cross-class pair momentarily has the best
+    IoU), yet the partition only lets a track be updated by dets of its
+    own class — so after the crossing every track sits back on a gt
+    trajectory of ITS class, each uid keeps one class for life, and the
+    whole stream still matches the oracle."""
+    gtb, _, gcls, db, dm, dc, de = generate_crossing_scene(
+        num_frames=40, num_objects=4, num_classes=2, embed_dim=MC_EMBED,
+        seed=2)
+    out = _run_engine_mc(db, dm, dc, de, use_kernels, "hungarian",
+                         cost_mod.IOU, 2)
+    _assert_identical_mc_streams(
+        out, _run_ref_mc(db, dm, dc, de, "hungarian", cost_mod.IOU, 2),
+        f"(crossing uk={use_kernels})")
+    uid_cls: dict = {}
+    for t in range(db.shape[0]):
+        em = np.asarray(out.emit[t, 0])
+        uids = np.asarray(out.uid[t, 0])
+        clss = np.asarray(out.cls[t, 0])
+        for k in np.where(em)[0]:
+            u, c = int(uids[k]), int(clss[k])
+            # class frozen at birth, stable for the track's whole lifetime
+            assert uid_cls.setdefault(u, c) == c, f"uid {u} changed class"
+            if t >= db.shape[0] - 5:
+                # well past the crossing: only same-class detections ever
+                # updated this track, so its box is glued to a gt
+                # trajectory of its own class, far from the other class's
+                dist = np.abs(gtb[t] - np.asarray(out.boxes[t, 0, k])).max(-1)
+                same, other = dist[gcls == c], dist[gcls != c]
+                assert same.min() < 5.0, (t, u, same.min())
+                assert same.min() < other.min(), (t, u)
+    # both classes actually tracked through the crossing
+    assert set(uid_cls.values()) == {0, 1}
+
+
+def test_class_preserved_through_lane_recycling():
+    """Recycled lanes must not leak the previous occupant's classes: two
+    sequences with disjoint class alphabets ({0,1} then {2,3}) served
+    through ONE lane — every emitted class stays inside its own
+    sequence's alphabet, and within a sequence each uid keeps one class."""
+    from repro.serve import StreamScheduler
+
+    scenes = []
+    for off, seed in ((0, 3), (2, 4)):
+        _, _, _, db, dm, dc, de = generate_crossing_scene(
+            num_frames=12, num_objects=4, num_classes=2,
+            embed_dim=MC_EMBED, seed=seed)
+        scenes.append((db, dm, dc + off, de))
+    eng = SortEngine(SortConfig(max_trackers=8,
+                                max_detections=scenes[0][0].shape[1],
+                                use_kernels=True, cost=cost_mod.IOU,
+                                num_classes=4))
+    sched = StreamScheduler(eng, num_lanes=1, chunk=5)
+    for i, (db, dm, dc, de) in enumerate(scenes):
+        sched.submit(f"s{i}", db, dm, det_class=dc)
+    results = sched.run()
+    assert [r.name for r in results] == ["s0", "s1"]
+    for res, alphabet in zip(results, ({0, 1}, {2, 3})):
+        seen: dict = {}
+        for t in range(res.num_frames):
+            for k in np.where(res.emit[t])[0]:
+                u, c = int(res.uid[t][k]), int(res.cls[t][k])
+                assert c in alphabet, (res.name, t, u, c)
+                assert seen.setdefault(u, c) == c, (res.name, u)
+        assert seen, res.name
