@@ -24,7 +24,8 @@ import traceback
 def main(argv=None) -> None:
     from benchmarks import (association_ablation, autoscale, datasets,
                             device_scaling, dispatch_overhead, kernel_ai,
-                            multiclass, ragged, scaling, speedup)
+                            multiclass, ragged, scaling, service_soak,
+                            speedup)
 
     ap = argparse.ArgumentParser(
         prog="benchmarks.run",
@@ -56,6 +57,10 @@ def main(argv=None) -> None:
         # composed costs x class partition vs the single-class IoU
         # baseline — one block-diagonal lane-batched solve (DESIGN.md §10)
         ("multiclass", multiclass.run, True),
+        # TrackingService front-end: admission/delivery overhead,
+        # chunk-boundary checkpoint tax, resume latency, shed behaviour
+        # (DESIGN.md §11)
+        ("service", service_soak.run, True),
     ]
     print("name,us_per_call,derived")
     failed = 0

@@ -50,10 +50,32 @@ MULTICLASS = SortConfig(max_trackers=16, max_detections=16,
                         cost=cost.iou_embed(embed_dim=8),
                         num_classes=3)
 
+# ``SERVICE`` — the crash-exact serving front-end (DESIGN.md §11): the
+# FUSED engine behind repro.serve.TrackingService.  The engine config is
+# deliberately NOT the megakernel: checkpoints are topology-neutral, so a
+# server may save under one execution strategy and resume under another —
+# this preset is the conservative default, SERVICE_KNOBS the front-end
+# policy (bounded admission, per-client rate limit, circuit breaker,
+# chunk-boundary checkpoint cadence).
+SERVICE = SortConfig(max_trackers=16, max_detections=16,
+                     use_kernels=True)
+
+SERVICE_KNOBS = {
+    "max_pending": 64,          # global in-flight bound (shed beyond it)
+    "per_client_pending": 16,   # per-client in-flight bound
+    "rate": 100.0,              # token-bucket refill, submissions/s/client
+    "burst": 20.0,              # bucket depth
+    "breaker_threshold": 3,     # consecutive chunk failures to open
+    "breaker_reset": 5.0,       # seconds before the half-open probe
+    "ckpt_every": 1,            # checkpoint every N chunk boundaries
+    "keep": 3,                  # retained checkpoints
+}
+
 PRESETS = {
     "baseline": BASELINE,
     "fused": FUSED,
     "megakernel": MEGAKERNEL,
     "megakernel-greedy": MEGAKERNEL_GREEDY,
     "multiclass": MULTICLASS,
+    "service": SERVICE,
 }

@@ -14,9 +14,25 @@ and results drain in submission order as MOT15 submission files.
 mesh (DESIGN.md §7) — each device scans its own lane shard, bit-identical
 to the single-device run.  On CPU, export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
+
+``--serve`` routes everything through the crash-exact service front-end
+(``repro.serve.TrackingService``, DESIGN.md §11): results are written as
+they finish, and with ``--ckpt-dir`` the full service state checkpoints
+at every ``--ckpt-every``-th chunk boundary, so a SIGKILL'd run resumed
+with ``--resume`` produces byte-identical output files::
+
+    PYTHONPATH=src python examples/tracking_service.py --serve \
+        --ckpt-dir /tmp/trk_ckpt --out /tmp/sort_out            # killed...
+    PYTHONPATH=src python examples/tracking_service.py --serve \
+        --ckpt-dir /tmp/trk_ckpt --out /tmp/sort_out --resume   # ...resumed
+
+``--kill-after-chunks N`` SIGKILLs the process after N chunks (exit 137)
+— the CI soak's deterministic crash injection.
 """
 import argparse
+import asyncio
 import os
+import signal
 import time
 
 import numpy as np
@@ -65,6 +81,44 @@ def load_or_synthesize(det_dir, num_classes=1, embed_dim=0):
                 _, _, db, dm = generate_scene(cfg)
                 seqs.append((name, db, dm, None, None))
     return seqs
+
+
+async def _serve(sched, seqs, args) -> int:
+    """The --serve path: pump the service chunk by chunk, writing each
+    finished sequence's MOT file the moment it is delivered (BEFORE the
+    covering checkpoint commits — at-least-once; a resumed run may
+    re-write identical files, never miss one)."""
+    from repro.serve import TrackingService
+
+    frames = [0]
+
+    def on_result(_idx, tracks):
+        mot.write_results(os.path.join(args.out, f"{tracks.name}.txt"),
+                          tracks.boxes, tracks.uid, tracks.emit)
+        frames[0] += tracks.num_frames
+
+    if args.resume:
+        svc = TrackingService.resume(sched, args.ckpt_dir,
+                                     ckpt_every=args.ckpt_every,
+                                     on_result=on_result)
+    else:
+        svc = TrackingService(sched, ckpt_dir=args.ckpt_dir,
+                              ckpt_every=args.ckpt_every,
+                              on_result=on_result)
+        for name, db, dm, dc, de in seqs:
+            await svc.submit(name, db, dm, det_class=dc, det_embed=de)
+        if svc.ckpt is not None:
+            svc.checkpoint(wait=True)   # pre-flight: resume always has a step
+    chunks = 0
+    while svc.busy:
+        await svc.step()
+        chunks += 1
+        if args.kill_after_chunks is not None and \
+                chunks >= args.kill_after_chunks:
+            svc.close()                 # flush the in-flight write, then die
+            os.kill(os.getpid(), signal.SIGKILL)
+    svc.close()
+    return frames[0]
 
 
 def main():
@@ -130,10 +184,32 @@ def main():
                          "dispatches; 1 = single-class (default)")
     ap.add_argument("--embed-dim", type=int, default=8,
                     help="appearance embedding width for --cost iou+embed")
+    ap.add_argument("--serve", action="store_true",
+                    help="run through the TrackingService front-end "
+                         "(DESIGN.md §11): async bounded admission, "
+                         "circuit-broken dispatch, and — with "
+                         "--ckpt-dir — crash-exact checkpoint/restore")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory for --serve; full service "
+                         "state snapshots at chunk boundaries")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="checkpoint every N chunk boundaries")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume --serve from the latest committed "
+                         "checkpoint in --ckpt-dir instead of submitting "
+                         "fresh work; resumed outputs are bit-identical "
+                         "to an uninterrupted run")
+    ap.add_argument("--kill-after-chunks", type=int, default=None,
+                    help="SIGKILL this process after N dispatched chunks "
+                         "(crash injection for the kill-and-resume soak; "
+                         "exits 137)")
     args = ap.parse_args()
     if args.min_lanes is not None and not args.autoscale:
         ap.error("--min-lanes only applies with --autoscale "
                  "(a fixed budget is just --lanes)")
+    if (args.resume or args.kill_after_chunks is not None) and \
+            not (args.serve and args.ckpt_dir):
+        ap.error("--resume/--kill-after-chunks need --serve and --ckpt-dir")
 
     spec = cost_mod.parse_cost(args.cost, embed_dim=args.embed_dim)
     seqs = load_or_synthesize(args.det_dir, num_classes=args.classes,
@@ -168,13 +244,16 @@ def main():
                             min_lanes=min_lanes, max_lanes=max_lanes)
 
     t_start = time.perf_counter()
-    for name, db, dm, dc, de in seqs:
-        sched.submit(name, db, dm, det_class=dc, det_embed=de)
-    total_frames = 0
-    for tracks in sched.run():                  # drains in submission order
-        mot.write_results(os.path.join(args.out, f"{tracks.name}.txt"),
-                          tracks.boxes, tracks.uid, tracks.emit)
-        total_frames += tracks.num_frames
+    if args.serve:
+        total_frames = asyncio.run(_serve(sched, seqs, args))
+    else:
+        for name, db, dm, dc, de in seqs:
+            sched.submit(name, db, dm, det_class=dc, det_embed=de)
+        total_frames = 0
+        for tracks in sched.run():              # drains in submission order
+            mot.write_results(os.path.join(args.out, f"{tracks.name}.txt"),
+                              tracks.boxes, tracks.uid, tracks.emit)
+            total_frames += tracks.num_frames
     dt = time.perf_counter() - t_start
     mode = ("chunk-resident megakernel" if args.chunk_kernel
             else "fused lane-persistent" if args.fused

@@ -1,1 +1,3 @@
-from .checkpoint import CheckpointManager, restore, save  # noqa: F401
+from .checkpoint import (CheckpointManager, committed_steps,  # noqa: F401
+                         flatten_with_paths, latest_step, restore,
+                         restore_flat, save)

@@ -27,6 +27,18 @@ class SortServiceConfig:
     # over lane_shards.  None = fixed budget of num_lanes.
     min_lanes: int | None = None
     max_lanes: int | None = None
+    # service front-end knobs (DESIGN.md §11) — consumed by
+    # repro.serve.TrackingService when this config backs a served
+    # deployment.  max_pending/per_client_pending bound the admission
+    # queue (submissions beyond them are shed with a Retry-After hint);
+    # rate/burst parameterize the per-client token bucket (None = no rate
+    # limit); ckpt_every is the chunk-boundary checkpoint cadence (0 = no
+    # checkpointing, i.e. no crash recovery).
+    max_pending: int = 4096
+    per_client_pending: int = 64
+    rate: float | None = None
+    burst: float | None = None
+    ckpt_every: int = 0
 
     @property
     def num_lanes(self) -> int:
@@ -81,6 +93,21 @@ MULTICLASS = SortServiceConfig(
                     max_age=1, min_hits=3, assoc="hungarian",
                     use_kernels=True, cost=cost.iou_embed(embed_dim=8),
                     num_classes=3))
+
+# Crash-exact resumable serving (DESIGN.md §11): the FUSED engine behind
+# repro.serve.TrackingService — bounded async admission with explicit
+# Retry-After shedding, per-client token-bucket rate limiting, a circuit
+# breaker over device dispatch, and a full-state checkpoint at every
+# chunk boundary so a SIGKILL'd server resumes bit-exactly.  The engine
+# is deliberately a non-megakernel path: checkpoints are topology-
+# neutral, so this server may resume a megakernel run's checkpoint (and
+# vice versa).
+SERVICE = SortServiceConfig(
+    sort=SortConfig(max_trackers=16, max_detections=16, iou_threshold=0.3,
+                    max_age=1, min_hits=3, assoc="hungarian",
+                    use_kernels=True),
+    max_pending=64, per_client_pending=16, rate=100.0, burst=20.0,
+    ckpt_every=1)
 
 SMOKE = SortServiceConfig(
     sort=SortConfig(max_trackers=8, max_detections=8, assoc="hungarian"),

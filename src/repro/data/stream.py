@@ -117,10 +117,27 @@ class ReorderBuffer:
         self._next = start
         self._held: dict[int, object] = {}
 
+    @property
+    def next_index(self) -> int:
+        """The watermark: the submission index the next release starts at.
+        Everything below it has already been released (the serving
+        checkpoint records this, DESIGN.md §11)."""
+        return self._next
+
+    @property
+    def held_indices(self) -> tuple[int, ...]:
+        """Indices parked above the watermark, ascending."""
+        return tuple(sorted(self._held))
+
     def put(self, index: int, item) -> None:
         if index < self._next or index in self._held:
             raise ValueError(f"sequence index {index} already released")
         self._held[index] = item
+
+    def peek(self, index: int):
+        """The parked item at ``index`` without releasing it (serving
+        checkpoint export reads held completions through this)."""
+        return self._held[index]
 
     def pop_ready(self) -> list:
         out = []

@@ -4,6 +4,11 @@ The paper's throughput result assigns one worker per video file; real
 serving traffic is an unbounded set of sequences with ragged lengths
 (paper Table I spans 71–1000 frames).  :mod:`repro.serve.scheduler`
 multiplexes that traffic onto the engine's fixed lane budget with exact
-lane recycling (DESIGN.md §3).
+lane recycling (DESIGN.md §3); :mod:`repro.serve.service` puts the
+production front-end around it — bounded async admission with explicit
+backpressure, a circuit breaker over device dispatch, and crash-exact
+checkpoint/restore (DESIGN.md §11).
 """
 from .scheduler import StreamScheduler, lane_ladder  # noqa: F401
+from .service import (CircuitBreaker, Overloaded,  # noqa: F401
+                      TokenBucket, TrackingService)

@@ -53,7 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import slots
-from repro.core.sort import SortEngine
+from repro.core.sort import SortEngine, lane_state_of, sort_state_of
 from repro.data.stream import ReorderBuffer, SequenceTracks
 
 
@@ -598,6 +598,254 @@ class StreamScheduler:
         results that finalized off the chunk path (e.g. zero-frame
         sequences completed at ``submit`` time)."""
         return self._ready.pop_ready()
+
+    def run_chunk(self) -> list[SequenceTracks]:
+        """Dispatch (at most) one planned chunk and release whatever
+        finished — the service front-end's pump unit (DESIGN.md §11).
+        Every return is a chunk boundary: :meth:`export_state` is legal
+        immediately after."""
+        return self._run_chunk()
+
+    # ------------------------------------------- checkpoint/restore hooks
+    # (DESIGN.md §11: the full serving state crosses the checkpoint in a
+    # topology-NEUTRAL form — device state in the engine layout via the
+    # exact layout inverses, host bookkeeping as numpy arrays + JSON-able
+    # meta — so a server restarted on a different execution strategy,
+    # stream-block padding, or device mesh resumes bit-exactly.)
+    STATE_SCHEMA = 1
+
+    def _engine_signature(self) -> dict:
+        """The semantic engine config a checkpoint must agree on.  The
+        execution strategy (use_kernels / chunk_kernel / block_b / mesh)
+        is deliberately absent: every path computes the same tracker
+        (track identities exact, coordinates to float tolerance —
+        tests/test_oracle_parity.py), so a checkpoint may resume on any
+        of them; resuming on the SAME strategy is bit-exact."""
+        cfg = self.engine.config
+        return {"max_trackers": cfg.max_trackers,
+                "max_detections": cfg.max_detections,
+                "iou_threshold": cfg.iou_threshold,
+                "max_age": cfg.max_age, "min_hits": cfg.min_hits,
+                "assoc": cfg.assoc, "dtype": cfg.dtype,
+                "num_classes": cfg.num_classes, "cost": repr(cfg.cost)}
+
+    def _engine_layout_state(self):
+        """Resident device state -> engine-layout ``SortState`` on host."""
+        if self._sharding is not None:
+            state = self._sharding._to_engine(self._state)
+        elif self.engine.config.use_kernels:
+            state = sort_state_of(self._state, self.num_lanes)
+        else:
+            state = self._state
+        return jax.tree.map(np.asarray, jax.device_get(state))
+
+    def _seq_arrays(self, seq: _Seq) -> dict:
+        t = self.engine.config.max_trackers
+        pre = f"seq/{seq.index}"
+        arrays = {
+            f"{pre}/det_boxes": seq.det_boxes,
+            f"{pre}/det_mask": seq.det_mask,
+            f"{pre}/out_boxes": (np.stack(seq.boxes) if seq.boxes
+                                 else np.zeros((0, t, 4), np.float32)),
+            f"{pre}/out_uid": (np.stack(seq.uid) if seq.uid
+                               else np.zeros((0, t), np.int32)),
+            f"{pre}/out_emit": (np.stack(seq.emit) if seq.emit
+                                else np.zeros((0, t), bool)),
+        }
+        if seq.det_class is not None:
+            arrays[f"{pre}/det_class"] = seq.det_class
+        if seq.det_embed is not None:
+            arrays[f"{pre}/det_embed"] = seq.det_embed
+        if self._need_class:
+            arrays[f"{pre}/out_cls"] = (np.stack(seq.cls) if seq.cls
+                                        else np.zeros((0, t), np.int32))
+        return arrays
+
+    def export_state(self) -> tuple[dict, dict]:
+        """Snapshot the COMPLETE serving state at a chunk boundary.
+
+        Returns ``(meta, arrays)``: ``meta`` is JSON-able (schema,
+        engine signature, lane occupancy/cursors, FIFO queue order,
+        reorder-buffer watermark, elastic ladder position, counters);
+        ``arrays`` is a flat ``{path: np.ndarray}`` dict holding the
+        engine-layout device state (``lane/...`` — per-lane Kalman
+        means/covariances, lifecycle pools, **uid namespaces**), every
+        live sequence's inputs + partially accumulated outputs
+        (``seq/<i>/...``), and finished-but-unreleased results
+        (``done/<i>/...``).  :meth:`import_state` consumes the pair;
+        everything a resumed scheduler needs to continue **bit-exactly**
+        is inside (tests/test_scheduler.py, tests/test_serving.py).
+        """
+        live = [s for s in self._occupant if s is not None] \
+            + list(self._pending)
+        meta = {
+            "schema": self.STATE_SCHEMA,
+            "engine": self._engine_signature(),
+            "max_dets": self.max_dets,
+            "num_lanes": self.num_lanes,
+            "occupant": [s.index if s is not None else None
+                         for s in self._occupant],
+            "cursor": [int(c) for c in self._cursor],
+            "pending": [s.index for s in self._pending],
+            "num_submitted": self._num_submitted,
+            "ready_next": self._ready.next_index,
+            "held": [int(i) for i in self._ready.held_indices],
+            "shrink_target": self._shrink_target,
+            "shrink_votes": self._shrink_votes,
+            "forced_width": self._forced_width,
+            "counters": {"frames_processed": self.frames_processed,
+                         "lane_steps": self.lane_steps,
+                         "chunks_run": self.chunks_run},
+            "admissions": [list(a) for a in self.admissions],
+            "seqs": {str(s.index): {"name": s.name} for s in live},
+            "done": {str(i): self._ready.peek(i).name
+                     for i in self._ready.held_indices},
+        }
+        from repro.ckpt.checkpoint import flatten_with_paths
+        keys, leaves, _ = flatten_with_paths(self._engine_layout_state())
+        arrays = {f"lane/{k}": np.asarray(leaf)
+                  for k, leaf in zip(keys, leaves)}
+        for seq in live:
+            arrays.update(self._seq_arrays(seq))
+        for i in self._ready.held_indices:
+            tr = self._ready.peek(i)
+            arrays[f"done/{i}/boxes"] = tr.boxes
+            arrays[f"done/{i}/uid"] = tr.uid
+            arrays[f"done/{i}/emit"] = tr.emit
+            if tr.cls is not None:
+                arrays[f"done/{i}/cls"] = tr.cls
+        return meta, arrays
+
+    def _rebuild_seq(self, idx: int, name: str, arrays: dict) -> _Seq:
+        pre = f"seq/{idx}"
+        missing = [k for k in (f"{pre}/det_boxes", f"{pre}/det_mask",
+                               f"{pre}/out_boxes", f"{pre}/out_uid",
+                               f"{pre}/out_emit")
+                   if k not in arrays]
+        if missing:
+            raise ValueError(f"checkpoint is missing sequence leaves "
+                             f"{missing} for live sequence {name!r}")
+        db = np.asarray(arrays[f"{pre}/det_boxes"], np.float32)
+        dm = np.asarray(arrays[f"{pre}/det_mask"], bool)
+        if dm.ndim != 2 or dm.shape[1] != self.max_dets:
+            raise ValueError(
+                f"sequence {name!r}: checkpointed detection budget "
+                f"{dm.shape} does not match this scheduler's "
+                f"max_dets={self.max_dets}")
+        dc = arrays.get(f"{pre}/det_class")
+        de = arrays.get(f"{pre}/det_embed")
+        if self._need_class and dc is None:
+            raise ValueError(f"sequence {name!r}: checkpoint carries no "
+                             f"det_class but this engine partitions classes")
+        if self._need_embed and de is None:
+            raise ValueError(f"sequence {name!r}: checkpoint carries no "
+                             f"det_embed but this engine's cost needs it")
+        seq = _Seq(idx, name, db, dm,
+                   det_class=(None if dc is None
+                              else np.asarray(dc, np.int32)),
+                   det_embed=(None if de is None
+                              else np.asarray(de, np.float32)))
+        seq.boxes = [np.array(a) for a in arrays[f"{pre}/out_boxes"]]
+        seq.uid = [np.array(a) for a in arrays[f"{pre}/out_uid"]]
+        seq.emit = [np.array(a) for a in arrays[f"{pre}/out_emit"]]
+        if self._need_class:
+            seq.cls = [np.array(a) for a in arrays[f"{pre}/out_cls"]]
+        return seq
+
+    def import_state(self, meta: dict, arrays: dict) -> None:
+        """Rebuild the full serving state from :meth:`export_state`'s
+        snapshot (typically round-tripped through ``repro.ckpt``).
+
+        Validates before touching anything: schema, the semantic engine
+        signature, the detection budget, and that the checkpointed lane
+        width is on this scheduler's ladder — so an elastic-restart
+        mismatch is a diagnosable ``ValueError``, not corrupted serving.
+        The device state re-enters through the exact engine-layout
+        inverses (and, in mesh mode, is re-placed with this topology's
+        ``NamedSharding``), so a same-strategy resume's per-sequence
+        outputs are bit-identical to an uninterrupted run; a resume onto
+        a different execution strategy matches it the way the strategies
+        match each other — identities exact, coordinates allclose.
+        """
+        if meta.get("schema") != self.STATE_SCHEMA:
+            raise ValueError(f"unsupported scheduler state schema "
+                             f"{meta.get('schema')!r} (this build speaks "
+                             f"{self.STATE_SCHEMA})")
+        sig = self._engine_signature()
+        if meta.get("engine") != sig:
+            diff = {k: (meta.get("engine", {}).get(k), sig[k])
+                    for k in sig if meta.get("engine", {}).get(k) != sig[k]}
+            raise ValueError(
+                f"checkpointed engine config does not match this "
+                f"scheduler's (checkpoint vs here): {diff}")
+        if int(meta["max_dets"]) != self.max_dets:
+            raise ValueError(f"checkpoint max_dets={meta['max_dets']} vs "
+                             f"this scheduler's {self.max_dets}")
+        width = int(meta["num_lanes"])
+        if width not in self.ladder:
+            raise ValueError(
+                f"checkpointed lane width {width} is not on this "
+                f"scheduler's ladder {self.ladder} — construct the "
+                f"scheduler with a ladder covering the checkpoint "
+                f"(elastic-restart width mismatch)")
+
+        # device state: engine layout -> this topology's resident layout
+        from repro.ckpt.checkpoint import flatten_with_paths
+        like = self.engine.init(width)
+        keys, leaves, treedef = flatten_with_paths(like)
+        missing = [k for k in keys if f"lane/{k}" not in arrays]
+        if missing:
+            extra = sorted(k for k in arrays if k.startswith("lane/"))
+            raise ValueError(f"checkpoint is missing device-state leaves "
+                             f"{missing}; it carries {extra}")
+        vals = []
+        for k, leaf in zip(keys, leaves):
+            arr = np.asarray(arrays[f"lane/{k}"])
+            want = tuple(np.shape(leaf))
+            if tuple(arr.shape) != want:
+                raise ValueError(f"device-state leaf {k}: checkpoint shape "
+                                 f"{tuple(arr.shape)} != expected {want}")
+            vals.append(jnp.asarray(
+                arr.astype(np.dtype(leaf.dtype), copy=False)))
+        eng_state = jax.tree.unflatten(treedef, vals)
+        if self.mesh is not None:
+            sharding = self._sharding_for(width)
+            self._state = sharding.place_engine_state(eng_state)
+            self._sharding = sharding
+        elif self.engine.config.use_kernels:
+            self._state = lane_state_of(eng_state, self.engine._block_s)
+        else:
+            self._state = eng_state
+
+        # host bookkeeping: occupancy, FIFO order, reorder buffer, elastic
+        seqs = {int(i): self._rebuild_seq(int(i), info["name"], arrays)
+                for i, info in meta["seqs"].items()}
+        self.num_lanes = width
+        self._occupant = [seqs[i] if i is not None else None
+                          for i in meta["occupant"]]
+        self._cursor = [int(c) for c in meta["cursor"]]
+        self._pending = collections.deque(seqs[i] for i in meta["pending"])
+        self._num_submitted = int(meta["num_submitted"])
+        self._ready = ReorderBuffer(start=int(meta["ready_next"]))
+        for i in meta["held"]:
+            cls = arrays.get(f"done/{i}/cls")
+            self._ready.put(int(i), SequenceTracks(
+                name=meta["done"][str(i)],
+                boxes=np.asarray(arrays[f"done/{i}/boxes"], np.float32),
+                uid=np.asarray(arrays[f"done/{i}/uid"], np.int32),
+                emit=np.asarray(arrays[f"done/{i}/emit"], bool),
+                cls=(np.asarray(cls, np.int32)
+                     if cls is not None else None)))
+        self._shrink_target = (None if meta["shrink_target"] is None
+                               else int(meta["shrink_target"]))
+        self._shrink_votes = int(meta["shrink_votes"])
+        self._forced_width = (None if meta["forced_width"] is None
+                              else int(meta["forced_width"]))
+        c = meta["counters"]
+        self.frames_processed = int(c["frames_processed"])
+        self.lane_steps = int(c["lane_steps"])
+        self.chunks_run = int(c["chunks_run"])
+        self.admissions = [tuple(a) for a in meta["admissions"]]
 
     def drain(self) -> list[SequenceTracks]:
         """Run chunks until no step work remains, then release everything

@@ -292,10 +292,17 @@ class LaneSharding:
                              "same mesh, not between meshes")
         eng_state = resize_streams(self._to_engine(state),
                                    new_sharding.num_lanes)
-        new_state = new_sharding._from_engine(eng_state)
-        new_sharding._state_specs = state_pspecs(new_state)
+        return new_sharding.place_engine_state(eng_state)
+
+    def place_engine_state(self, eng_state):
+        """Global engine-layout state (``num_lanes`` streams) -> this
+        sharding's resident layout, placed with its ``NamedSharding`` —
+        the entry point for restoring a topology-neutral checkpoint onto
+        this mesh (DESIGN.md §11) and the commit half of :meth:`migrate`."""
+        new_state = self._from_engine(eng_state)
+        self._state_specs = state_pspecs(new_state)
         return jax.device_put(new_state,
-                              named(new_sharding._state_specs, self.mesh))
+                              named(self._state_specs, self.mesh))
 
     # ----------------------------------------------------------- placement
     def place(self, det, dm, active, reset, *extras):

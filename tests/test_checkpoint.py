@@ -73,3 +73,122 @@ def test_restore_respects_dtype_and_structure(tmp_path):
     restored, _ = ck.restore(str(tmp_path), t)
     assert restored["a"].dtype == np.int32
     assert np.asarray(restored["nested"][0]).dtype == jnp.bfloat16
+
+
+# ------------------------------------------------- crash-recovery contract
+def test_async_write_failure_raises_on_wait(tmp_path, monkeypatch):
+    """A failed background write must surface — on wait() — never be
+    mistaken for a committed checkpoint (the silent-loss regression)."""
+    mgr = ck.CheckpointManager(str(tmp_path), keep=2)
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+    monkeypatch.setattr(ck, "save", boom)
+    mgr.save_async(1, _tree())
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    # the error is consumed once surfaced; the manager is reusable
+    monkeypatch.undo()
+    mgr.save_async(2, _tree())
+    mgr.wait()
+    assert ck.latest_step(str(tmp_path)) == 2
+
+
+def test_async_write_failure_raises_on_next_save(tmp_path, monkeypatch):
+    mgr = ck.CheckpointManager(str(tmp_path))
+
+    def boom(*a, **k):
+        raise OSError("quota exceeded")
+    monkeypatch.setattr(ck, "save", boom)
+    mgr.save_async(1, _tree())
+    mgr._thread.join()           # let the failure land without consuming it
+    with pytest.raises(OSError, match="quota exceeded"):
+        mgr.save_async(2, _tree())
+
+
+def test_stale_tmp_dirs_swept_fresh_kept(tmp_path):
+    """Debris of a writer killed between mkdtemp and os.replace is GC'd
+    once stale; a live (fresh) writer's temp dir survives the sweep."""
+    stale = tmp_path / ".tmp_ckpt_dead"
+    fresh = tmp_path / ".tmp_ckpt_live"
+    stale.mkdir()
+    fresh.mkdir()
+    os.utime(stale, (0, 0))      # ancient mtime
+    mgr = ck.CheckpointManager(str(tmp_path), keep=1)   # sweeps at init
+    assert not stale.exists()
+    assert fresh.exists()
+    mgr.save_async(1, _tree())
+    mgr.wait()                   # sweeps again via _gc
+    assert fresh.exists()        # still younger than stale_tmp_age
+
+
+def test_gc_skips_foreign_step_names(tmp_path):
+    (tmp_path / "step_final").mkdir()          # unparseable step number
+    mgr = ck.CheckpointManager(str(tmp_path), keep=1)
+    for s in (1, 2, 3):
+        mgr.save_async(s, _tree())
+    mgr.wait()                   # _gc must not crash on / delete step_final
+    assert (tmp_path / "step_final").exists()
+    steps = [d for d in os.listdir(tmp_path)
+             if d.startswith("step_") and d != "step_final"]
+    assert steps == ["step_000000003"]
+
+
+def test_keep_zero_rejected(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        ck.CheckpointManager(str(tmp_path), keep=0)
+
+
+def test_restore_missing_keys_is_diagnosable(tmp_path):
+    """Restoring onto a mismatched tree names the offending paths in a
+    ValueError instead of dying with a bare npz KeyError."""
+    ck.save(str(tmp_path), 1, _tree())
+    bad = {"layer": {"w": np.zeros((4, 8), np.float32),
+                     "extra": np.zeros(3)},
+           "step": np.zeros((), np.int32)}
+    with pytest.raises(ValueError) as ei:
+        ck.restore(str(tmp_path), bad)
+    msg = str(ei.value)
+    assert "layer/extra" in msg          # the missing requested path
+    assert "layer/b" in msg              # the checkpoint-only path
+
+
+def test_stale_latest_falls_back_to_committed(tmp_path):
+    """A kill between the step-dir rename and the LATEST commit (or after
+    its target was GC'd) must land the restore on the newest COMMITTED
+    step, not fail on the stale pointer."""
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    ck.save(str(tmp_path), 2, jax.tree.map(lambda x: x + 1, t))
+    # crash simulation: LATEST points at a step whose dir never completed
+    with open(tmp_path / "LATEST", "w") as fh:
+        fh.write("9")
+    os.makedirs(tmp_path / "step_000000009")   # present but no manifest
+    restored, step = ck.restore(str(tmp_path), t)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["step"]), 4)
+    flat, fstep = ck.restore_flat(str(tmp_path))
+    assert fstep == 2
+    # an explicit step is trusted verbatim
+    _, s1 = ck.restore(str(tmp_path), t, step=1)
+    assert s1 == 1
+
+
+def test_restore_flat_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 5, t)
+    flat, step = ck.restore_flat(str(tmp_path))
+    assert step == 5
+    keys, leaves, _ = ck.flatten_with_paths(t)
+    assert sorted(flat) == sorted(keys)
+    for k, leaf in zip(keys, leaves):
+        np.testing.assert_array_equal(flat[k], np.asarray(leaf))
+
+
+def test_committed_steps_ignores_incomplete(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 3, t)
+    ck.save(str(tmp_path), 7, t)
+    os.makedirs(tmp_path / "step_000000011")   # no manifest: uncommitted
+    (tmp_path / "step_junk").mkdir()
+    assert ck.committed_steps(str(tmp_path)) == [3, 7]

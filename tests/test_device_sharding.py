@@ -290,3 +290,31 @@ def test_sharded_exactness_property(lengths, shards):
     _, solo = _serve(eng, seqs, mesh=None)
     _, shard = _serve(eng, seqs, mesh=lane_mesh(shards))
     _assert_results_equal(solo, shard)
+
+
+# ------------------------------------- checkpoint topology neutrality §11
+@needs_multi
+def test_export_import_across_topologies():
+    """The serving checkpoint is topology-neutral (DESIGN.md §11): state
+    exported from a 4-device mesh resumes bit-exactly on a single device
+    and vice versa — the engine-layout crossing erases the placement."""
+    seqs = [(f"s{i}", *_scene(40 + i, f)) for i, f in enumerate(LENGTHS)]
+    eng = _engine(True)
+    _, ref = _serve(eng, seqs, mesh=lane_mesh(4))
+
+    def interrupted(save_mesh, load_mesh):
+        a = StreamScheduler(_engine(True), num_lanes=4, chunk=4,
+                            mesh=save_mesh)
+        for name, db, dm in seqs:
+            a.submit(name, db, dm)
+        out = a.run_chunk()
+        meta, arrays = a.export_state()
+        b = StreamScheduler(_engine(True), num_lanes=4, chunk=4,
+                            mesh=load_mesh)
+        b.import_state(meta, arrays)
+        while b.busy:
+            out.extend(b.run_chunk())
+        return out
+
+    _assert_results_equal(interrupted(lane_mesh(4), None), ref)
+    _assert_results_equal(interrupted(None, lane_mesh(4)), ref)

@@ -349,3 +349,80 @@ def test_utilization_full_when_lanes_saturated():
     assert sched.frames_processed == 16
     assert sched.lane_steps == 16
     assert sched.utilization == 1.0
+
+
+# --------------------------------------------- checkpoint/restore hooks
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_export_import_midrun_roundtrip(use_kernels):
+    """export_state at a chunk boundary, import into a FRESH scheduler,
+    continue: the combined output stream equals an uninterrupted run and
+    every sequence stays bit-identical to its solo run (DESIGN.md §11)."""
+    eng = _engine(use_kernels)
+    seqs = [(f"s{i}", *_scene(i, frames=f))
+            for i, f in enumerate([17, 30, 9, 23])]
+
+    sched = StreamScheduler(eng, num_lanes=2, chunk=8)
+    for name, db, dm in seqs:
+        sched.submit(name, db, dm)
+    results = []
+    for _ in range(2):
+        results.extend(sched.run_chunk())
+    meta, arrays = sched.export_state()
+    import json
+    json.dumps(meta)                    # the meta half must be JSON-able
+
+    fresh = StreamScheduler(_engine(use_kernels), num_lanes=2, chunk=8)
+    fresh.import_state(meta, arrays)
+    assert fresh.chunks_run == sched.chunks_run
+    while fresh.busy:
+        results.extend(fresh.run_chunk())
+    assert [t.name for t in results] == [n for n, _, _ in seqs]
+    for (name, db, dm), tracks in zip(seqs, results):
+        _assert_tracks_equal_solo(tracks, _solo_run(eng, db, dm), name)
+
+
+def test_export_import_preserves_held_reorder_results():
+    """A finished-but-unreleased completion (parked above the reorder
+    watermark) must cross the checkpoint and release in order."""
+    eng = _engine(False)
+    sched = StreamScheduler(eng, num_lanes=2, chunk=8)
+    long = _scene(0, frames=30)
+    short = _scene(1, frames=4)
+    sched.submit("long", *long)
+    sched.submit("short", *short)       # finishes first, held for "long"
+    out = sched.run_chunk()
+    assert out == [] and len(sched._ready) == 1
+    meta, arrays = sched.export_state()
+    fresh = StreamScheduler(_engine(False), num_lanes=2, chunk=8)
+    fresh.import_state(meta, arrays)
+    results = []
+    while fresh.busy:
+        results.extend(fresh.run_chunk())
+    assert [t.name for t in results] == ["long", "short"]
+    _assert_tracks_equal_solo(results[1], _solo_run(eng, *short), "short")
+
+
+def test_import_rejects_mismatched_engine_and_width():
+    eng = _engine(False)
+    sched = StreamScheduler(eng, num_lanes=2, chunk=8)
+    db, dm = _scene(0, frames=6)
+    sched.submit("s", db, dm)
+    sched.run_chunk()
+    meta, arrays = sched.export_state()
+
+    other = SortEngine(SortConfig(max_trackers=8, max_detections=MAX_DETS,
+                                  iou_threshold=0.5))
+    with pytest.raises(ValueError, match="engine config"):
+        StreamScheduler(other, num_lanes=2, chunk=8).import_state(
+            meta, arrays)
+    with pytest.raises(ValueError, match="ladder"):
+        StreamScheduler(_engine(False), num_lanes=4, chunk=8).import_state(
+            meta, arrays)
+    with pytest.raises(ValueError, match="schema"):
+        StreamScheduler(_engine(False), num_lanes=2, chunk=8).import_state(
+            {**meta, "schema": 99}, arrays)
+    lane_key = next(k for k in arrays if k.startswith("lane/"))
+    broken = {k: v for k, v in arrays.items() if k != lane_key}
+    with pytest.raises(ValueError, match="missing device-state"):
+        StreamScheduler(_engine(False), num_lanes=2, chunk=8).import_state(
+            meta, broken)

@@ -58,3 +58,359 @@ def test_slot_eviction_backfills():
     loop.step()
     assert len(loop.outputs) >= 2, loop.outputs
     assert any(u != uid0 for u in loop.outputs)
+
+
+# ======================================================================
+# TrackingService — async admission, backpressure, circuit breaker, and
+# crash-exact checkpoint/restore over the StreamScheduler (DESIGN.md §11).
+import asyncio
+
+import pytest
+
+from repro.core.sort import SortConfig, SortEngine
+from repro.serve import (CircuitBreaker, Overloaded, StreamScheduler,
+                         TokenBucket, TrackingService)
+
+MAX_DETS = 7
+
+
+class FakeClock:
+    """Injectable monotonic time: rate limits and breaker timeouts are
+    deterministic under test."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _scenes(lengths, seed=3):
+    from repro.data.synthetic import SceneConfig, generate_scene
+    out = []
+    for i, f in enumerate(lengths):
+        _, _, db, dm = generate_scene(SceneConfig(
+            num_frames=f, max_objects=4, seed=seed + i))
+        d = db.shape[1]
+        assert d <= MAX_DETS, d
+        db = np.pad(db, ((0, 0), (0, MAX_DETS - d), (0, 0)))
+        dm = np.pad(dm, ((0, 0), (0, MAX_DETS - d)))
+        out.append((f"seq{i}", db, dm))
+    return out
+
+
+def _sched(use_kernels=False, assoc="hungarian", chunk=8, lanes=2):
+    eng = SortEngine(SortConfig(max_trackers=8, max_detections=MAX_DETS,
+                                use_kernels=use_kernels, assoc=assoc))
+    return StreamScheduler(eng, num_lanes=lanes, max_dets=MAX_DETS,
+                           chunk=chunk)
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+async def _serve_all(svc, seqs):
+    for s in seqs:
+        await svc.submit(*s)
+    await svc.drain()
+    return dict(svc.completed)
+
+
+def _assert_completed_equal(got, ref):
+    assert sorted(got) == sorted(ref)
+    for i in ref:
+        assert got[i].name == ref[i].name
+        np.testing.assert_array_equal(got[i].boxes, ref[i].boxes)
+        np.testing.assert_array_equal(got[i].uid, ref[i].uid)
+        np.testing.assert_array_equal(got[i].emit, ref[i].emit)
+
+
+# ----------------------------------------------------------- token bucket
+def test_token_bucket_refills_and_hints():
+    clk = FakeClock()
+    b = TokenBucket(rate=2.0, burst=2.0, clock=clk)
+    assert b.try_take() == 0.0 and b.try_take() == 0.0
+    wait = b.try_take()
+    assert wait == pytest.approx(0.5)       # 1 token at 2/s
+    clk.advance(0.5)
+    assert b.try_take() == 0.0
+
+
+def test_token_bucket_rejects_bad_params():
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0, burst=1)
+
+
+# -------------------------------------------------------- circuit breaker
+def test_breaker_open_halfopen_close_cycle():
+    clk = FakeClock()
+    br = CircuitBreaker(failure_threshold=2, reset_timeout=5.0, clock=clk)
+    assert br.allow()
+    br.record_failure()
+    assert br.state == CircuitBreaker.CLOSED and br.allow()
+    br.record_failure()                      # threshold: opens
+    assert br.state == CircuitBreaker.OPEN
+    assert not br.allow()
+    assert br.retry_after() == pytest.approx(5.0)
+    clk.advance(5.0)
+    assert br.allow()                        # the half-open probe
+    assert br.state == CircuitBreaker.HALF_OPEN
+    br.record_failure()                      # probe fails: re-open
+    assert br.state == CircuitBreaker.OPEN and not br.allow()
+    clk.advance(5.0)
+    assert br.allow()
+    br.record_success()                      # probe succeeds: close
+    assert br.state == CircuitBreaker.CLOSED and br.failures == 0
+
+
+# ------------------------------------------------------- admission bounds
+def test_rate_limit_sheds_then_recovers():
+    clk = FakeClock()
+    seqs = _scenes([10, 10, 10])
+
+    async def go():
+        svc = TrackingService(_sched(), rate=1.0, burst=1.0, clock=clk)
+        await svc.submit(*seqs[0])
+        with pytest.raises(Overloaded) as ei:
+            await svc.submit(*seqs[1])
+        assert ei.value.reason == "rate" and ei.value.retry_after > 0
+        clk.advance(ei.value.retry_after)    # honour the hint: admitted
+        await svc.submit(*seqs[1])
+        assert [c for c, r, _ in svc.sheds] == ["default"]
+        await svc.drain()
+        assert sorted(svc.completed) == [0, 1]
+    _run(go())
+
+
+def test_queue_bounds_shed_and_never_grow():
+    seqs = _scenes([10] * 6)
+
+    async def go():
+        svc = TrackingService(_sched(), max_pending=3, per_client_pending=2)
+        await svc.submit(*seqs[0], client="a")
+        await svc.submit(*seqs[1], client="a")
+        with pytest.raises(Overloaded) as ei:    # per-client cap first
+            await svc.submit(*seqs[2], client="a")
+        assert ei.value.reason == "client_queue"
+        await svc.submit(*seqs[2], client="b")
+        with pytest.raises(Overloaded) as ei:    # then the global cap
+            await svc.submit(*seqs[3], client="c")
+        assert ei.value.reason == "queue" and ei.value.retry_after > 0
+        assert svc.pending == 3                  # bound held
+        await svc.drain()
+        assert svc.pending == 0                  # drained: admissible again
+        await svc.submit(*seqs[3], client="c")
+        await svc.drain()
+    _run(go())
+
+
+def test_zero_frame_sequence_through_service():
+    """A zero-frame sequence finalizes at submit time; the service must
+    deliver it (in order) without a single chunk dispatch."""
+    db = np.zeros((0, MAX_DETS, 4), np.float32)
+    dm = np.zeros((0, MAX_DETS), bool)
+
+    async def go():
+        svc = TrackingService(_sched())
+        idx = await svc.submit("empty", db, dm)
+        assert idx in svc.completed
+        assert svc.completed[idx].num_frames == 0
+        assert (await svc.result(idx)).name == "empty"
+        assert svc.pending == 0
+    _run(go())
+
+
+# ------------------------------------------ breaker around real dispatch
+def test_breaker_opens_sheds_probes_and_recovers(tmp_path, monkeypatch):
+    """Injected chunk failures open the breaker (submissions and steps
+    shed fast), the timed half-open probe retries, and — because the
+    failed dispatches rolled back to the last committed checkpoint — the
+    recovered run's outputs are bit-identical to an undisturbed one."""
+    clk = FakeClock()
+    seqs = _scenes([20, 15, 10])
+    ref = _run(_serve_all(TrackingService(_sched()), seqs))
+
+    async def go():
+        sched = _sched()
+        svc = TrackingService(sched, ckpt_dir=str(tmp_path),
+                              breaker_threshold=2, breaker_reset=5.0,
+                              clock=clk)
+        for s in seqs:
+            await svc.submit(*s)
+        svc.checkpoint(wait=True)
+        real = sched.run_chunk        # bound before patching
+
+        def boom():
+            raise RuntimeError("injected device failure")
+        monkeypatch.setattr(sched, "run_chunk", boom)
+        for _ in range(2):            # threshold failures -> OPEN
+            with pytest.raises(RuntimeError):
+                await svc.step()
+        assert svc.breaker.state == CircuitBreaker.OPEN
+        with pytest.raises(Overloaded) as ei:     # fast-shed both paths
+            await svc.step()
+        assert ei.value.reason == "breaker_open"
+        with pytest.raises(Overloaded):
+            await svc.submit("late", seqs[0][1], seqs[0][2])
+        monkeypatch.setattr(sched, "run_chunk", real)
+        clk.advance(5.0)              # half-open probe allowed, succeeds
+        await svc.step()
+        assert svc.breaker.state == CircuitBreaker.CLOSED
+        await svc.drain()
+        svc.close()
+        return dict(svc.completed)
+
+    _assert_completed_equal(_run(go()), ref)
+
+
+def test_rollback_without_checkpoint_is_noop(monkeypatch):
+    sched = _sched()
+    seqs = _scenes([10])
+
+    async def go():
+        svc = TrackingService(sched, breaker_threshold=1)
+        await svc.submit(*seqs[0])
+
+        def boom():
+            raise RuntimeError("no ckpt to roll back to")
+        monkeypatch.setattr(sched, "run_chunk", boom)
+        with pytest.raises(RuntimeError):
+            await svc.step()
+        assert svc.breaker.state == CircuitBreaker.OPEN
+    _run(go())
+
+
+# -------------------------------------------- crash-exact resume (tentpole)
+@pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("assoc", ["hungarian", "greedy"])
+def test_kill_and_resume_bit_identical(tmp_path, use_kernels, assoc):
+    """The acceptance bar: SIGKILL mid-serve (simulated by abandoning the
+    service object after some chunks), resume from the latest committed
+    checkpoint, and every sequence's tracks come out bit-identical to an
+    uninterrupted run — on both engine paths and both association modes."""
+    seqs = _scenes([17, 30, 9, 23, 12])
+    ref = _run(_serve_all(
+        TrackingService(_sched(use_kernels, assoc)), seqs))
+
+    async def crash():
+        svc = TrackingService(_sched(use_kernels, assoc),
+                              ckpt_dir=str(tmp_path), ckpt_every=1)
+        for s in seqs:
+            await svc.submit(*s)
+        svc.checkpoint(wait=True)
+        for _ in range(3):
+            await svc.step()
+        svc.close()                   # flush; then the process "dies"
+        return dict(svc.completed)
+
+    async def resume():
+        svc = TrackingService.resume(_sched(use_kernels, assoc),
+                                     str(tmp_path))
+        await svc.drain()
+        svc.close()
+        return dict(svc.completed)
+
+    before = _run(crash())
+    after = _run(resume())
+    got = dict(before)
+    got.update(after)                 # union covers every sequence
+    _assert_completed_equal(got, ref)
+    # at-least-once: anything the resumed run re-delivered is bit-equal
+    for i in set(before) & set(after):
+        np.testing.assert_array_equal(before[i].boxes, after[i].boxes)
+
+
+def test_resume_lands_on_last_committed_step(tmp_path):
+    """Chunks dispatched AFTER the last committed checkpoint are lost to
+    the crash; resume must redo them — never skip, never double-advance
+    device state."""
+    seqs = _scenes([25, 18])
+    ref = _run(_serve_all(TrackingService(_sched()), seqs))
+
+    async def crash():
+        svc = TrackingService(_sched(), ckpt_dir=str(tmp_path),
+                              ckpt_every=100)   # only the manual ckpt
+        for s in seqs:
+            await svc.submit(*s)
+        svc.checkpoint(wait=True)               # committed: step 0
+        for _ in range(2):                      # ...then uncovered work
+            await svc.step()
+
+    async def resume():
+        svc = TrackingService.resume(_sched(), str(tmp_path))
+        assert svc.sched.chunks_run == 0        # back at the commit point
+        await svc.drain()
+        svc.close()
+        return dict(svc.completed)
+
+    _run(crash())
+    _assert_completed_equal(_run(resume()), ref)
+
+
+def test_resume_across_engine_paths(tmp_path):
+    """Checkpoints are execution-strategy-neutral: save under the
+    per-phase engine, resume under the fused kernel path.  The two paths
+    agree to float tolerance, not bit-for-bit (tests/test_oracle_parity
+    compares them with allclose), so the cross-path resume contract is:
+    track identities and lifecycle exact, coordinates allclose.  Same-
+    strategy resume is bit-exact (test_kill_and_resume_bit_identical)."""
+    seqs = _scenes([14, 21, 8])
+    ref = _run(_serve_all(TrackingService(_sched(use_kernels=True)), seqs))
+
+    async def crash():
+        svc = TrackingService(_sched(use_kernels=False),
+                              ckpt_dir=str(tmp_path))
+        for s in seqs:
+            await svc.submit(*s)
+        svc.checkpoint(wait=True)
+        await svc.step()
+        svc.close()
+        return dict(svc.completed)
+
+    async def resume():
+        svc = TrackingService.resume(_sched(use_kernels=True),
+                                     str(tmp_path))
+        await svc.drain()
+        svc.close()
+        return dict(svc.completed)
+
+    before = _run(crash())
+    got = dict(before)
+    got.update(_run(resume()))
+    assert sorted(got) == sorted(ref)
+    for i in ref:
+        assert got[i].name == ref[i].name
+        np.testing.assert_array_equal(got[i].uid, ref[i].uid)
+        np.testing.assert_array_equal(got[i].emit, ref[i].emit)
+        np.testing.assert_allclose(got[i].boxes, ref[i].boxes,
+                                   rtol=1e-3, atol=1e-2)
+
+
+def test_resume_rejects_non_service_checkpoint(tmp_path):
+    from repro.ckpt import save
+    save(str(tmp_path), 1, {"w": np.zeros(3)})
+    with pytest.raises(ValueError, match="service metadata"):
+        TrackingService.resume(_sched(), str(tmp_path))
+
+
+def test_service_checkpoint_write_failure_raises(tmp_path, monkeypatch):
+    """An injected checkpoint-write failure must surface through the
+    service (close()/next checkpoint), never pass as a committed save."""
+    from repro.ckpt import checkpoint as ck
+    seqs = _scenes([12])
+
+    async def go():
+        svc = TrackingService(_sched(), ckpt_dir=str(tmp_path))
+        await svc.submit(*seqs[0])
+
+        def boom(*a, **k):
+            raise OSError("injected write failure")
+        monkeypatch.setattr(ck, "save", boom)
+        svc.checkpoint()                 # async: failure lands in-thread
+        with pytest.raises(OSError, match="injected write failure"):
+            svc.close()
+    _run(go())
